@@ -1,0 +1,37 @@
+"""Paper Table 3 + §6.3 synthetic degree sweep: CSR vs USR probe cost as the
+maximum join degree d varies, at fixed output size.
+
+Paper finding (CPU): CSR's linear chain walk beats USR's binary search at
+low d (cache-resident chains), loses at high d. TPU adaptation finding
+(DESIGN.md §3): the vmapped chain walk serializes lanes at high d while the
+vectorized binary search stays flat — the crossover moves to d ~= 1, i.e.
+USR is the right default on TPU. This benchmark measures exactly that.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_shred, get
+from .timing import row, time_fn
+from .workloads import degree_sweep_workload
+
+OUT_SIZE = 1 << 16
+DEGREES = (1, 4, 16, 64, 256, 1024)
+K = 2048  # probes per GET
+
+
+def run(out):
+    for d in DEGREES:
+        db, q = degree_sweep_workload(0, OUT_SIZE, d)
+        shred = build_shred(db, q, rep="both")
+        n = int(shred.join_size)
+        pos = jax.random.randint(jax.random.key(1), (K,), 0, n).astype(jnp.int64)
+        us_u = time_fn(jax.jit(lambda p: get(shred, p, rep="usr")), pos)
+        us_c = time_fn(jax.jit(lambda p: get(shred, p, rep="csr")), pos)
+        out(row(f"table3/probe-usr/d={d}", us_u, f"k={K};|Q|={n}"))
+        out(row(f"table3/probe-csr/d={d}", us_c, f"csr/usr={us_c/us_u:.2f}x"))
+        us_bu = time_fn(lambda: build_shred(db, q, rep="usr"), reps=3)
+        us_bc = time_fn(lambda: build_shred(db, q, rep="csr"), reps=3)
+        out(row(f"table3/build-usr/d={d}", us_bu))
+        out(row(f"table3/build-csr/d={d}", us_bc))

@@ -1,0 +1,39 @@
+"""Paper Table 6 / Supplementary "Caching": effect of the bulk-probe caching
+optimization (Fig. 11) on chained-index probing.
+
+Paper finding (CPU): caching consistently helps CSR (linked lists live at
+non-contiguous addresses; resuming skips re-walks) and slightly hurts USR.
+TPU-adaptation finding: the cached walk is *sequential by construction* (a
+scan carrying the resume state), so on lockstep hardware it loses to the
+data-parallel vmapped walk except at extreme degree — quantified here; this
+is the measured basis for DESIGN.md §3's claim that bulk vectorization
+subsumes the caching optimization.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_shred
+from repro.core.probe import csr_get_rows, csr_get_rows_cached, usr_get_rows
+from .timing import row, time_fn
+from .workloads import degree_sweep_workload
+
+OUT_SIZE = 1 << 14
+K = 1024
+
+
+def run(out):
+    for d in (4, 64, 512):
+        db, q = degree_sweep_workload(0, OUT_SIZE, d)
+        shred = build_shred(db, q, rep="both")
+        n = int(shred.join_size)
+        pos = jnp.sort(jax.random.randint(jax.random.key(1), (K,), 0, n)
+                       .astype(jnp.int64))
+        us_plain = time_fn(jax.jit(lambda p: csr_get_rows(shred, p)), pos, reps=3)
+        us_cache = time_fn(jax.jit(lambda p: csr_get_rows_cached(shred, p)), pos, reps=3)
+        us_usr = time_fn(jax.jit(lambda p: usr_get_rows(shred, p)), pos, reps=3)
+        out(row(f"table6/csr-vmap/d={d}", us_plain, f"k={K}"))
+        out(row(f"table6/csr-cached/d={d}", us_cache,
+                f"cached/vmap={us_cache/us_plain:.2f}x"))
+        out(row(f"table6/usr/d={d}", us_usr))

@@ -1,0 +1,52 @@
+"""Kernel microbenchmarks: Pallas (interpret) vs jnp reference.
+
+NOTE: interpret-mode timings measure the *simulated* kernel on CPU — they
+validate plumbing cost, not TPU speed. TPU performance is assessed
+structurally via the dry-run roofline (§Roofline); these rows exist to keep
+the harness one-command and to catch pathological regressions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from .timing import row, time_fn
+
+
+def run(out):
+    # bsearch probe
+    pref = jnp.cumsum(jax.random.randint(jax.random.key(0), (4096,), 0, 9)).astype(jnp.int32)
+    pref = jnp.concatenate([jnp.zeros((1,), jnp.int32), pref])
+    q = jax.random.randint(jax.random.key(1), (8192,), 0, int(pref[-1])).astype(jnp.int32)
+    out(row("kernels/bsearch/pallas", time_fn(ops.searchsorted_prefix, pref, q)))
+    out(row("kernels/bsearch/xla", time_fn(
+        jax.jit(lambda p, x: jnp.searchsorted(p, x, side='right') - 1), pref, q)))
+
+    # prefix sum
+    x = jax.random.randint(jax.random.key(2), (1 << 16,), 0, 9).astype(jnp.int32)
+    out(row("kernels/prefix_sum/pallas", time_fn(ops.prefix_sum, x)))
+    out(row("kernels/prefix_sum/xla", time_fn(jax.jit(jnp.cumsum), x)))
+
+    # decode attention
+    B, H, S, D = 2, 8, 2048, 64
+    ks = jax.random.split(jax.random.key(3), 3)
+    qq = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+    kk = jax.random.normal(ks[1], (B, H, S, D), jnp.float32)
+    vv = jax.random.normal(ks[2], (B, H, S, D), jnp.float32)
+    bias = jnp.zeros((B, S), jnp.float32)
+    out(row("kernels/flash_decode/pallas-interpret",
+            time_fn(ops.decode_attention, qq, kk, vv, bias, reps=3)))
+    out(row("kernels/flash_decode/xla-ref",
+            time_fn(jax.jit(ref.flash_decode_ref), qq, kk, vv, bias, reps=3)))
+
+    # prefill (full-sequence causal) attention
+    Sq = 1024
+    q4 = jax.random.normal(ks[0], (1, 4, Sq, 64), jnp.float32)
+    k4 = jax.random.normal(ks[1], (1, 4, Sq, 64), jnp.float32)
+    v4 = jax.random.normal(ks[2], (1, 4, Sq, 64), jnp.float32)
+    out(row("kernels/flash_prefill/pallas-interpret",
+            time_fn(lambda: ops.prefill_attention(q4, k4, v4, block_q=256,
+                                                  block_k=256), reps=3)))
+    out(row("kernels/flash_prefill/xla-ref",
+            time_fn(jax.jit(ref.flash_prefill_ref), q4, k4, v4, reps=3)))

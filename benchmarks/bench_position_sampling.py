@@ -1,0 +1,34 @@
+"""Paper Fig. 7: position-sampling efficiency as a function of p.
+
+Reproduced claim: GEO (O(np) work) beats BERN (O(n)) for small p; BERN wins
+for large p; BINOM tracks GEO with higher constants; HYBRID takes the best
+of both at the p=0.5 threshold. On TPU/JAX the crossover driver is memory
+lanes touched, not branch prediction (DESIGN.md §3) — the qualitative
+ordering is what transfers.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sampling
+from .timing import row, time_fn
+
+N = 200_000
+PS = (0.0001, 0.001, 0.01, 0.1, 0.3, 0.5, 0.7, 0.9)
+
+
+def run(out):
+    for p in PS:
+        cap = int(min(max(N * p * 1.3 + 6 * (N * p) ** 0.5 + 256, 512), N + 1))
+        fns = {
+            "bern": jax.jit(partial(sampling.bern_positions, n=N, cap=cap)),
+            "geo": jax.jit(partial(sampling.geo_positions, n=N, cap=cap)),
+            "binom": jax.jit(partial(sampling.binom_positions, n=N, cap=cap)),
+            "hybrid": jax.jit(partial(sampling.hybrid_positions, n=N, cap=cap)),
+        }
+        for name, fn in fns.items():
+            us = time_fn(lambda k: fn(k, jnp.float64(p)), jax.random.key(0))
+            out(row(f"fig7/{name}/p={p}", us, f"n={N};cap={cap}"))

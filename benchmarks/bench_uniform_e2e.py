@@ -1,0 +1,50 @@
+"""Paper Fig. 8 / Table 5: end-to-end uniform sampling — Index-and-Probe
+(CSR / USR x GEO / BERN) vs Materialize-and-Scan (M-CSYA / M-USYA / M-BJ).
+
+Reproduced claims: (a) I&P beats M&S for small/moderate p and the gap grows
+with join size (STATS-like >> JOB-like); (b) at p -> 1 M&S catches up
+(flatten is sequential-friendly); (c) on the TPU-adapted implementation USR
+probing is the vectorized fast path (the CPU-paper's CSR advantage inverts —
+DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import PoissonSampler, build_shred, yannakakis
+from .timing import row, time_fn
+from .workloads import job_like, stats_like
+
+PS = (0.0001, 0.01, 0.1, 0.5, 0.9)
+
+
+def _bench_suite(name, db, q, out):
+    sampler_u = PoissonSampler(db, q, rep="usr")
+    sampler_c = PoissonSampler(db, q, rep="csr")
+    n = sampler_u.join_size
+
+    # index build (amortized per Monte-Carlo loop, reported separately)
+    us = time_fn(lambda: build_shred(db, q, rep="usr"), reps=3)
+    out(row(f"fig8/{name}/build/usr", us, f"|Q(db)|={n}"))
+    us = time_fn(lambda: build_shred(db, q, rep="csr"), reps=3)
+    out(row(f"fig8/{name}/build/csr", us, f"|Q(db)|={n}"))
+
+    for p in PS:
+        method = "geo" if p <= 0.5 else "bern"
+        cap = int(min(max(n * p * 1.3 + 6 * (n * p) ** 0.5 + 256, 512), n + 1))
+        for repname, s in (("usr", sampler_u), ("csr", sampler_c)):
+            us = time_fn(lambda k: s.uniform_sample(k, p, cap=cap, method=method),
+                         jax.random.key(1), reps=3)
+            out(row(f"fig8/{name}/I&P-{repname}-{method}/p={p}", us))
+        # M&S baseline: flatten everything + one Bernoulli per join tuple
+        us = time_fn(lambda k: yannakakis.materialize_and_scan(k, db, q, uniform_p=p),
+                     jax.random.key(1), reps=3)
+        out(row(f"fig8/{name}/M-SYA/p={p}", us))
+
+
+def run(out):
+    db, q = job_like(scale=1500)
+    _bench_suite("job_like", db, q, out)
+    db, q = stats_like(scale=2000)
+    _bench_suite("stats_like", db, q, out)

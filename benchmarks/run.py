@@ -1,0 +1,52 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Usage:
+    PYTHONPATH=src python -m benchmarks.run [--only fig7,fig9,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated substrings to filter suites")
+    args = ap.parse_args()
+
+    from . import (bench_position_sampling, bench_uniform_e2e, bench_poisson,
+                   bench_build_probe, bench_full_join, bench_qc,
+                   bench_caching, bench_kernels, roofline)
+    suites = [
+        ("fig7_position_sampling", bench_position_sampling.run),
+        ("fig8_uniform_e2e", bench_uniform_e2e.run),
+        ("fig9_poisson", bench_poisson.run),
+        ("table3_build_probe", bench_build_probe.run),
+        ("table4_full_join", bench_full_join.run),
+        ("fig10_qc", bench_qc.run),
+        ("table6_caching", bench_caching.run),
+        ("kernels", bench_kernels.run),
+        ("roofline", roofline.run),
+    ]
+    if args.only:
+        keys = args.only.split(",")
+        suites = [(n, f) for n, f in suites if any(k in n for k in keys)]
+
+    print("name,us_per_call,derived")
+    failures = []
+    for name, fn in suites:
+        print(f"# --- {name} ---")
+        try:
+            fn(print)
+        except Exception:  # noqa: BLE001
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        print(f"# FAILED suites: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Batched serving example: prefill + lockstep decode over a request batch
+(the serve_step the dry-run lowers at decode_32k / long_500k scale).
+
+    PYTHONPATH=src python examples/serve_lm.py --arch zamba2_1p2b
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

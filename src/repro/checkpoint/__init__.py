@@ -1,0 +1,2 @@
+"""Fault-tolerant checkpointing (atomic, content-checked, keep-N, async)."""
+from .manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,33 @@
+"""repro.core — Poisson sampling over acyclic joins (the paper's contribution).
+
+Public API:
+    Database, Relation, Atom, JoinQuery       data model / queries
+    build_shred, Shred, get                   random-access index (CSR/USR)
+    PoissonSampler, JoinSample                end-to-end Index-and-Probe
+    sampling.*                                position-sampling methods
+    yannakakis.*                              full joins + M&S baselines
+    distributed.*                             shard_map multi-pod sampling
+
+x64 note: join sizes reach 1e10 (paper §1), so offsets/prefix vectors are
+int64. JAX only honors int64 with the x64 flag; importing repro.core enables
+it process-wide. Model code (repro.models) is dtype-explicit everywhere and
+unaffected.
+"""
+import jax as _jax
+
+_jax.config.update("jax_enable_x64", True)
+
+from .relations import Relation, pack_keys, dense_keys  # noqa: E402
+from .database import Database  # noqa: E402
+from .jointree import Atom, JoinQuery, gyo_join_tree, is_acyclic, reroot_for  # noqa: E402
+from .shred import Shred, ShredNode, build_shred, build_plan  # noqa: E402
+from .probe import get, get_rows, csr_get_rows, usr_get_rows  # noqa: E402
+from . import sampling, estimate, yannakakis  # noqa: E402
+from .poisson import PoissonSampler, JoinSample  # noqa: E402
+
+__all__ = [
+    "Relation", "Database", "Atom", "JoinQuery", "gyo_join_tree", "is_acyclic",
+    "reroot_for", "Shred", "ShredNode", "build_shred", "build_plan", "get",
+    "get_rows", "csr_get_rows", "usr_get_rows", "sampling", "estimate",
+    "yannakakis", "PoissonSampler", "JoinSample", "pack_keys", "dense_keys",
+]

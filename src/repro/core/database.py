@@ -1,0 +1,48 @@
+"""A tiny schema-aware database: named relations with ordered columns."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Mapping, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .relations import Relation
+from .jointree import Atom
+
+__all__ = ["Database"]
+
+
+@dataclasses.dataclass
+class Database:
+    """relations: name -> Relation; schemas: name -> ordered column names.
+
+    Atom variables bind positionally to the schema order, which is what makes
+    self-joins (one relation, several aliases with different variables) work.
+    """
+
+    relations: Dict[str, Relation]
+    schemas: Dict[str, Tuple[str, ...]]
+
+    @staticmethod
+    def from_columns(tables: Mapping[str, Mapping[str, Sequence]]) -> "Database":
+        rels, schemas = {}, {}
+        for name, cols in tables.items():
+            schemas[name] = tuple(cols.keys())
+            rels[name] = Relation({c: jnp.asarray(np.asarray(v)) for c, v in cols.items()})
+        return Database(rels, schemas)
+
+    def size(self) -> int:
+        """|db| = total number of tuples."""
+        return sum(r.num_rows for r in self.relations.values())
+
+    def instance_for(self, atom: Atom) -> Relation:
+        """The atom's relation with columns renamed to the atom's variables."""
+        rel = self.relations[atom.relation]
+        schema = self.schemas[atom.relation]
+        if len(schema) != len(atom.variables):
+            raise ValueError(
+                f"atom {atom.name}: {len(atom.variables)} variables for "
+                f"{len(schema)}-column relation {atom.relation}"
+            )
+        return Relation({v: rel.columns[c] for c, v in zip(schema, atom.variables)})

@@ -1,0 +1,160 @@
+"""Multi-pod distributed Poisson sampling (shard_map).
+
+Why Poisson sampling scales embarrassingly well (and fixed-size sampling
+does not): the join result is the disjoint union of the joins produced by
+any partition of the ROOT relation's rows, and Poisson trials are
+independent per tuple. So block-partitioning the root across devices and
+sampling each block independently (with a device-folded PRNG key) is
+*distributionally identical* to sampling globally — no coordination, no
+rejection, one psum to report the global count. A fixed-k sampler would
+instead need a global multivariate-hypergeometric split of k across shards.
+
+Layout:
+  * root relation rows: block-partitioned over the ("pod", "data") axes
+    (pad to a multiple of the shard count with weight-0 rows);
+  * child relations: replicated (they are the small dimension tables in the
+    paper's workloads; a semijoin pre-filter bounds them by the root's keys);
+  * per-shard shredded index built once (stacked pytree, leading shard dim);
+  * per-step: shard_map(sample) -> per-shard positions/columns + counts.
+
+The same module also exposes the dry-run entry used by launch/dryrun.py for
+the paper's own "architecture" on the production meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import estimate, probe, sampling
+from .database import Database
+from .jointree import Atom, JoinQuery
+from .poisson import JoinSample, _sample_jit
+from .relations import Relation
+from .shred import Shred, build_shred
+
+__all__ = ["ShardedPoissonSampler", "partition_root"]
+
+I64 = jnp.int64
+
+
+def partition_root(
+    db: Database, query: JoinQuery, num_shards: int
+) -> Tuple[Sequence[Database], str]:
+    """Split the database into ``num_shards`` copies whose root-relation rows
+    block-partition the original (padded with repeat-last rows that are
+    weight-neutralized by a zero probability). Children are replicated."""
+    from .shred import build_plan
+
+    plan = build_plan(query)
+    root_atom = plan.atom
+    root_rel = db.relations[root_atom.relation]
+    n = root_rel.num_rows
+    per = -(-n // num_shards)
+    pad = per * num_shards - n
+    prob_col = None
+    if query.prob_var is not None:
+        schema = db.schemas[root_atom.relation]
+        for c, v in zip(schema, root_atom.variables):
+            if v == query.prob_var:
+                prob_col = c
+    shards = []
+    for s in range(num_shards):
+        lo, hi = s * per, min((s + 1) * per, n)
+        idx = np.arange(lo, hi)
+        if hi - lo < per:  # pad with last row, neutralized via p = 0
+            idx = np.concatenate([idx, np.full(per - (hi - lo), max(n - 1, 0))])
+        cols = {}
+        for c, v in root_rel.columns.items():
+            col = jnp.take(v, jnp.asarray(idx), axis=0)
+            if c == prob_col and hi - lo < per:
+                col = col.at[hi - lo:].set(0)
+            cols[c] = col
+        rels = dict(db.relations)
+        rels[root_atom.relation] = Relation(cols)
+        shards.append(Database(rels, db.schemas))
+    return shards, root_atom.relation
+
+
+class ShardedPoissonSampler:
+    """Data-parallel Poisson sampling over a device mesh.
+
+    Builds one shredded index per shard (all identical shapes), stacks them
+    into a single pytree with a leading shard axis, and shard_maps the
+    per-step sampler over the mesh's data-like axes.
+    """
+
+    def __init__(
+        self,
+        db: Database,
+        query: JoinQuery,
+        mesh: Mesh,
+        axes: Tuple[str, ...] = ("data",),
+        rep: str = "usr",
+        method: str = "exprace",
+    ):
+        self.mesh = mesh
+        self.axes = axes
+        self.rep = "usr" if rep == "both" else rep
+        self.method = method
+        self.num_shards = int(np.prod([mesh.shape[a] for a in axes]))
+        shards, self.root_name = partition_root(db, query, self.num_shards)
+
+        built = [build_shred(sdb, query, rep=rep) for sdb in shards]
+        self.shred = jax.tree.map(lambda *xs: jnp.stack(xs), *built)
+        root = built[0].root
+        pvar = query.prob_var
+        self.w = jnp.stack([b.root.weight for b in built])
+        self.p = jnp.stack([b.root.data.column(pvar) for b in built])
+        self.prefE = jnp.stack([b.root_prefE for b in built])
+
+        mean = float(sum(float(estimate.expected_sample_size(w, p))
+                         for w, p in zip(self.w, self.p)) / self.num_shards)
+        std = max(float(estimate.sample_std(self.w[0], self.p[0])), 1.0)
+        self.cap = estimate.plan_capacity(mean, std)
+        mass = float(estimate.exprace_arrival_mass(self.w[0], self.p[0]))
+        self.acap = estimate.plan_capacity(mass * 1.1 + 8, mass**0.5)
+
+        spec = P(axes)  # shard the leading (stacked) dim over the data axes
+        self._sharded = jax.jit(
+            jax.shard_map(
+                partial(self._local_sample, cap=self.cap, acap=self.acap,
+                        rep=self.rep, method=self.method, axes=self.axes),
+                mesh=mesh,
+                in_specs=(spec, spec, spec, spec, P()),
+                out_specs=(spec, P()),
+                check_vma=False,
+            )
+        )
+
+    @staticmethod
+    def _local_sample(shred, w, p, prefE, key, *, cap, acap, rep, method, axes):
+        # Fold the shard coordinate into the key: independent trials per shard.
+        idx = jnp.zeros((), jnp.int32)
+        for a in axes:
+            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+        key = jax.random.fold_in(key, idx)
+        # Drop the leading (stacked) singleton shard dim.
+        shred, w, p, prefE = jax.tree.map(lambda x: x[0], (shred, w, p, prefE))
+        s = _sample_jit(shred, w, p, prefE, key, cap=cap, rep=rep,
+                        method=method, acap=acap)
+        total = jax.lax.psum(s.count, axes)
+        # Re-add the shard dim so out_specs can concatenate across shards.
+        s = jax.tree.map(lambda x: x[None], s)
+        return s, total
+
+    def sample_step(self, key) -> Tuple[JoinSample, jnp.ndarray]:
+        """One independent global Poisson sample. Returns the sharded
+        JoinSample (leading dim = shards) and the global count."""
+        return self._sharded(self.shred, self.w, self.p, self.prefE, key)
+
+    # -- dry-run support -----------------------------------------------------
+    def lower_step(self):
+        key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
+        args = jax.eval_shape(lambda: (self.shred, self.w, self.p, self.prefE))
+        return self._sharded.lower(*args, key)

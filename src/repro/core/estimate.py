@@ -1,0 +1,44 @@
+"""Sample-size estimation and capacity planning.
+
+XLA needs static output shapes, so samplers draw into a fixed-capacity
+buffer. The expected Poisson sample size and its variance are exactly
+computable from the index in O(|N|):
+    E[k] = sum_t w_t * p_t,     Var[k] = sum_t w_t * p_t * (1 - p_t)
+(independent Bernoulli trials). Capacity = E + sigmas * sqrt(Var) + slack
+covers overflow with probability ~1 - 1e-9 at sigmas=6; poisson.py re-draws
+with doubled capacity on the (measurable) overflow event.
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+__all__ = ["expected_sample_size", "sample_std", "plan_capacity", "round_up"]
+
+
+def expected_sample_size(w, p) -> jnp.ndarray:
+    return jnp.sum(w.astype(jnp.float64) * p.astype(jnp.float64))
+
+
+def sample_std(w, p) -> jnp.ndarray:
+    p = p.astype(jnp.float64)
+    return jnp.sqrt(jnp.sum(w.astype(jnp.float64) * p * (1.0 - p)))
+
+
+def exprace_arrival_mass(w, p) -> jnp.ndarray:
+    """Expected raw Poisson-arrival count of the EXPRACE sampler:
+    Lam = sum_t w_t * (-ln(1 - min(p_t, 1-p_t))), always <= ln2 * sum w_t/2."""
+    p = jnp.clip(p.astype(jnp.float64), 0.0, 1.0)
+    pi = jnp.minimum(p, 1.0 - p)
+    return jnp.sum(w.astype(jnp.float64) * (-jnp.log1p(-jnp.minimum(pi, 0.5))))
+
+
+def round_up(x: int, multiple: int = 128) -> int:
+    return int(-(-x // multiple)) * multiple
+
+
+def plan_capacity(mean: float, std: float, sigmas: float = 6.0, slack: int = 64) -> int:
+    """Static capacity for a sampler invocation (multiple of 128 for TPU lanes)."""
+    cap = int(math.ceil(float(mean) + sigmas * float(std))) + slack
+    return round_up(max(cap, 128))

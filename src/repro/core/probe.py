@@ -1,0 +1,227 @@
+"""Random access into the (virtual) flattened join result (paper §4, Figs 4/5/11/12).
+
+Both GETs are *bulk* by construction: the probe vector ``pos`` is processed
+as one data-parallel batch. The paper's sequential "caching optimization"
+(resume a linked-list walk / binary search from the previous probe) exists to
+amortize work across consecutive probes on a single core; on TPU the same
+amortization comes from executing all probes in lockstep vectors, so the bulk
+APIs here are the faithful analogue (DESIGN.md §3/§4).
+
+USR-GET: one vectorized binary search per tree node — O(log|db|) depth per
+probe, fully parallel across probes. The searches over the *global* exclusive
+weight-prefix array are confined to the correct join-key run automatically,
+because a run's weight interval [cumw_excl[start], cumw_excl[start+len]) is
+contiguous in the global prefix (see shred.py).
+
+CSR-GET: faithful linked-list walk (bounded while_loop), vmapped over probes
+— O(log|db| + d) per probe with d the max join degree. Kept as the
+paper-faithful baseline; pointer chasing does not vectorize on TPU.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .shred import Shred, ShredNode
+
+__all__ = ["get", "get_rows", "csr_get_rows", "usr_get_rows",
+           "csr_get_rows_cached"]
+
+I64 = jnp.int64
+
+
+def _root_locate(shred: Shred, pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Binary search the root prefix vector: pos -> (root row j, local offset i)."""
+    prefE = shred.root_prefE
+    n = shred.root.num_rows
+    j = jnp.clip(jnp.searchsorted(prefE, pos, side="right") - 1, 0, max(n - 1, 0))
+    local = pos - prefE[j]
+    return j.astype(jnp.int32), local.astype(I64)
+
+
+# ---------------------------------------------------------------------------
+# USR
+# ---------------------------------------------------------------------------
+
+def _usr_child_locate(node: ShredNode, ci: int, rows: jnp.ndarray, idx: jnp.ndarray):
+    """Locate offset ``idx`` within the child-ci group of parent ``rows``.
+
+    One global searchsorted over the child's exclusive weight prefix.
+    """
+    child = node.children[ci]
+    start = node.child_start[ci][rows]          # (k,) offsets into sorted order
+    cumw_excl = child.cumw_excl                 # (n_c + 1,)
+    base = cumw_excl[start]
+    target = base + idx
+    # smallest jj with cumw_incl[jj] > target  <=>  cumw_excl[jj+1] > target
+    jj = jnp.clip(
+        jnp.searchsorted(cumw_excl, target, side="right") - 1,
+        0,
+        child.num_rows - 1,
+    )
+    local = target - cumw_excl[jj]
+    child_rows = child.perm[jj]
+    return child_rows.astype(jnp.int32), local.astype(I64)
+
+
+def _usr_sub(node: ShredNode, rows: jnp.ndarray, local: jnp.ndarray, out: Dict[str, jnp.ndarray]):
+    out[node.name] = rows
+    # Mixed-radix split (paper eq. 6-7): child 0 is least significant.
+    for ci, child in enumerate(node.children):
+        w = node.child_w[ci][rows]
+        w_safe = jnp.maximum(w, 1)
+        idx = local % w_safe
+        local = local // w_safe
+        crows, clocal = _usr_child_locate(node, ci, rows, idx)
+        _usr_sub(child, crows, clocal, out)
+
+
+def usr_get_rows(shred: Shred, pos: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Resolve probe positions to per-node row indices (USR)."""
+    assert shred.rep in ("usr", "both"), "index was not built with USR columns"
+    rows, local = _root_locate(shred, pos)
+    out: Dict[str, jnp.ndarray] = {}
+    _usr_sub(shred.root, rows, local, out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CSR
+# ---------------------------------------------------------------------------
+
+def _csr_walk(child_weight: jnp.ndarray, nxt: jnp.ndarray, hd: jnp.ndarray, idx: jnp.ndarray):
+    """Walk the same-key chain until the cumulative weight covers ``idx``.
+
+    Vectorized over probes via vmap; each lane runs its own bounded
+    while_loop (paper Fig. 4 lines 11-15, incl. skipping weight-0 tuples).
+    """
+
+    def one(h, i):
+        def cond(st):
+            row, rem = st
+            return jnp.logical_and(row >= 0, rem >= child_weight[row])
+
+        def body(st):
+            row, rem = st
+            return nxt[row], rem - child_weight[row]
+
+        row, rem = jax.lax.while_loop(cond, body, (h, i))
+        return row, rem
+
+    return jax.vmap(one)(hd, idx)
+
+
+def _csr_sub(node: ShredNode, rows: jnp.ndarray, local: jnp.ndarray, out: Dict[str, jnp.ndarray]):
+    out[node.name] = rows
+    for ci, child in enumerate(node.children):
+        w = node.child_w[ci][rows]
+        w_safe = jnp.maximum(w, 1)
+        idx = local % w_safe
+        local = local // w_safe
+        hd = node.child_hd[ci][rows]
+        crows, clocal = _csr_walk(child.weight, child.nxt, hd, idx)
+        crows = jnp.maximum(crows, 0).astype(jnp.int32)  # clamp sentinel lanes
+        _csr_sub(child, crows, clocal.astype(I64), out)
+
+
+def csr_get_rows(shred: Shred, pos: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Resolve probe positions to per-node row indices (CSR)."""
+    assert shred.rep in ("csr", "both"), "index was not built with CSR columns"
+    rows, local = _root_locate(shred, pos)
+    out: Dict[str, jnp.ndarray] = {}
+    _csr_sub(shred.root, rows, local, out)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# CSR bulk probe with the paper's caching optimization (Fig. 11)
+# ---------------------------------------------------------------------------
+
+def _csr_walk_cached(child_weight, nxt, hd, idx):
+    """Faithful Fig.-11 semantics: probes are processed in (ascending-
+    position) order and a chain traversal resumes from where the previous
+    probe on the SAME list stopped, instead of restarting at the head.
+
+    Realized as one lax.scan over the probe vector carrying
+    (prev_head, prev_row, prev_consumed): sequential like the paper's loop —
+    this is the *paper-faithful baseline*; the vmapped walk in _csr_walk is
+    the data-parallel adaptation benchmarked against it (table6 bench).
+    """
+
+    def step(carry, inp):
+        prev_head, prev_row, prev_consumed = carry
+        h, i = inp
+        same = jnp.logical_and(prev_head == h, i >= prev_consumed)
+        row0 = jnp.where(same, prev_row, h)
+        rem0 = jnp.where(same, i - prev_consumed, i)
+        consumed0 = jnp.where(same, prev_consumed, 0)
+
+        def cond(st):
+            row, rem, _ = st
+            return jnp.logical_and(row >= 0, rem >= child_weight[row])
+
+        def body(st):
+            row, rem, cons = st
+            w = child_weight[row]
+            return nxt[row], rem - w, cons + w
+
+        row, rem, consumed = jax.lax.while_loop(cond, body, (row0, rem0, consumed0))
+        return (h, row, consumed), (row, rem)
+
+    init = (jnp.int32(-2), jnp.int32(-1), jnp.zeros((), idx.dtype))
+    _, (rows, rems) = jax.lax.scan(step, init, (hd, idx))
+    return rows, rems
+
+
+def csr_get_rows_cached(shred: Shred, pos: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """CSR GET with the caching optimization; expects ascending ``pos``
+    (samplers emit sorted positions, the paper's usage)."""
+    assert shred.rep in ("csr", "both")
+    rows, local = _root_locate(shred, pos)
+    out: Dict[str, jnp.ndarray] = {}
+
+    def sub(node: ShredNode, rows, local):
+        out[node.name] = rows
+        for ci, child in enumerate(node.children):
+            w = node.child_w[ci][rows]
+            w_safe = jnp.maximum(w, 1)
+            idx = local % w_safe
+            local_next = local // w_safe
+            hd = node.child_hd[ci][rows]
+            crows, clocal = _csr_walk_cached(child.weight, child.nxt, hd, idx)
+            crows = jnp.maximum(crows, 0).astype(jnp.int32)
+            sub(child, crows, clocal.astype(I64))
+            local = local_next
+
+    sub(shred.root, rows, local)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# public GET
+# ---------------------------------------------------------------------------
+
+def get_rows(shred: Shred, pos: jnp.ndarray, rep: str = None) -> Dict[str, jnp.ndarray]:
+    rep = rep or ("usr" if shred.rep in ("usr", "both") else "csr")
+    if rep == "usr":
+        return usr_get_rows(shred, pos)
+    return csr_get_rows(shred, pos)
+
+
+def get(shred: Shred, pos: jnp.ndarray, rep: str = None) -> Dict[str, jnp.ndarray]:
+    """idx.GET(pos): the bag of join tuples at the given flat positions.
+
+    Returns variable -> (k,) array. Lanes whose pos is out of range
+    (>= join_size, the caller's invalid sentinel) contain arbitrary values and
+    must be masked by the caller — this keeps GET shape-static.
+    """
+    node_rows = get_rows(shred, pos, rep)
+    out: Dict[str, jnp.ndarray] = {}
+    for node in shred.root.nodes():
+        rows = node_rows[node.name]
+        for v in node.owned:
+            out[v] = jnp.take(node.data.column(v), rows, axis=0)
+    return out

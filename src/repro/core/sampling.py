@@ -1,0 +1,277 @@
+"""Position sampling (paper §5): BERN / GEO / BINOM / HYBRID and the
+non-uniform (Poisson) liftings PTBERN / PTGEO / PTHYBRID, plus EXPRACE —
+this repo's beyond-paper, fully-vectorized non-uniform sampler.
+
+Static-shape discipline: every sampler returns a fixed-capacity position
+vector plus (count, overflow). Capacity planning lives in estimate.py; on
+overflow the caller re-draws with a larger capacity (poisson.py). Positions
+use int64 (join sizes reach 1e10 in the paper's EpiQL workload) — core
+enables jax x64 on import (see core/__init__.py).
+
+EXPRACE (beyond paper, DESIGN.md §3) — exact non-uniform Poisson sampling as
+a *thinned Poisson process*, with no sequential per-root loop:
+
+  A Bernoulli(p) trial per unit cell is equivalent to "a Poisson process with
+  rate lambda = -ln(1-p) drops >= 1 arrival in the cell" (P[>=1] = 1-e^-lam
+  = p; disjoint cells independent). Over all root segments this is ONE
+  inhomogeneous Poisson process with piecewise-constant rate, total mass
+  Lam = sum_t w_t * lambda_t. Sample it directly:
+      M ~ Poisson(Lam); M iid arrival locations via inverse-CDF
+      (searchsorted into the cumulative mass); dedupe cells with one sort.
+  For p_t > 1/2, sample the *complement* process (failures, rate -ln p_t,
+  also <= ln 2 per cell) and invert via the l-th-missing-value formula —
+  so the expected arrival count is <= ln2 * E[min(p,1-p) * w] <= 0.70 E[k]
+  slots of overhead, for every p in [0, 1] including the exact endpoints.
+  All phases are searchsorted / sort / cumsum — O(|N| + C log C) fully
+  data-parallel work for capacity C. The paper's PT* methods instead scan
+  root tuples sequentially (Fig. 6 loop) — kept below as host oracles.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "PositionSample",
+    "bern_positions",
+    "geo_positions",
+    "binom_positions",
+    "hybrid_positions",
+    "exprace_positions",
+    "pt_bern_flat_positions",
+    "pt_positions_host",
+    "HYBRID_THRESHOLD",
+]
+
+I64 = jnp.int64
+F64 = jnp.float64
+HYBRID_THRESHOLD = 0.5  # paper §6.1: GEO wins for p <= 0.5, BERN above
+_TINY = 1e-12
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PositionSample:
+    """A fixed-capacity probe sequence. positions[i] for i >= count equals the
+    sentinel (the join size n) and must be masked downstream."""
+
+    positions: jnp.ndarray  # (cap,) int64, ascending over valid lanes
+    count: jnp.ndarray  # () int64 — number of valid positions (<= cap)
+    overflow: jnp.ndarray  # () bool — true sample size exceeded cap
+
+    def tree_flatten(self):
+        return (self.positions, self.count, self.overflow), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+    @property
+    def capacity(self) -> int:
+        return self.positions.shape[0]
+
+
+def _finish(positions, valid, n, more_beyond) -> PositionSample:
+    positions = jnp.where(valid, positions, n)
+    count = jnp.sum(valid).astype(I64)
+    return PositionSample(positions.astype(I64), count, more_beyond)
+
+
+# ---------------------------------------------------------------------------
+# Uniform position sampling over [0, n)
+# ---------------------------------------------------------------------------
+
+def bern_positions(key, p, n: int, cap: int) -> PositionSample:
+    """Paper's BERN: one Bernoulli(p) trial per position. Theta(n) lanes."""
+    u = jax.random.uniform(key, (n,), F64)
+    mask = u < p
+    total = jnp.sum(mask).astype(I64)
+    (idx,) = jnp.nonzero(mask, size=cap, fill_value=n)
+    valid = jnp.arange(cap) < jnp.minimum(total, cap)
+    return _finish(idx.astype(I64), valid, jnp.asarray(n, I64), total > cap)
+
+
+def geo_positions(key, p, n, cap: int) -> PositionSample:
+    """Paper's GEO (Fig. 6), vectorized: draw ``cap`` geometric gaps at once,
+    prefix-sum them into positions. O(cap) regardless of n; exact because a
+    Bernoulli(p) process's success indices have iid Geometric(p) gaps."""
+    n = jnp.asarray(n, I64)
+    p = jnp.asarray(p, F64)
+    u = jax.random.uniform(key, (cap,), F64, minval=_TINY)
+    safe_p = jnp.clip(p, _TINY, 1.0 - _TINY)
+    gaps = jnp.floor(jnp.log(u) / jnp.log1p(-safe_p)).astype(F64)
+    gaps = jnp.where(p <= 0.0, jnp.asarray(n, F64) + 1.0, gaps)
+    gaps = jnp.where(p >= 1.0, 0.0, gaps)
+    gaps = jnp.minimum(gaps, 4.0 * jnp.asarray(n, F64) + 2.0)  # avoid inf->int UB
+    positions = jnp.cumsum(gaps.astype(I64)) + jnp.arange(cap, dtype=I64)
+    valid = positions < n
+    # If the last lane is still in range the process hasn't exhausted [0, n):
+    more = jnp.logical_and(cap > 0, valid[-1] if cap > 0 else False)
+    return _finish(positions, valid, n, more)
+
+
+def binom_positions(key, p, n: int, cap: int) -> PositionSample:
+    """Paper's BINOM: draw k ~ Binomial(n, p), then a uniform k-subset of
+    [0, n). The k-subset is drawn exactly via Gumbel-top-k over the n cells
+    (the indices of the k smallest of n iid keys form a uniform k-subset).
+    Note: Theta(n log n) here vs the O(n min(p,1-p) + np) of [7]/[23] —
+    Vitter-style sequential subset draws don't vectorize; the paper discards
+    BINOM after its Fig. 7 anyway (DESIGN.md §8)."""
+    kk, ku = jax.random.split(key)
+    k = jax.random.binomial(kk, n=jnp.asarray(n, F64), p=jnp.asarray(p, F64)).astype(I64)
+    k = jnp.minimum(k, n)
+    overflow = k > cap
+    k_eff = jnp.minimum(k, cap)
+    keys = jax.random.uniform(ku, (n,), F64)
+    order = jnp.argsort(keys)  # uniform random permutation
+    chosen = jnp.sort(jnp.where(jnp.arange(n) < k_eff, order, n)).astype(I64)
+    m = min(n, cap)
+    positions = jnp.full((cap,), n, I64).at[:m].set(chosen[:m])
+    valid = jnp.arange(cap, dtype=I64) < k_eff
+    return _finish(positions, valid, jnp.asarray(n, I64), overflow)
+
+
+def hybrid_positions(key, p, n: int, cap: int) -> PositionSample:
+    """Paper's HYBRID: GEO for p <= 0.5, BERN otherwise (threshold from §6.1)."""
+    return jax.lax.cond(
+        jnp.asarray(p, F64) <= HYBRID_THRESHOLD,
+        lambda k: geo_positions(k, p, n, cap),
+        lambda k: bern_positions(k, p, n, cap),
+        key,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Non-uniform (Poisson) position sampling over root groups
+# ---------------------------------------------------------------------------
+
+def exprace_positions(
+    key, w, p, prefE, cap: int, arrival_cap: int = 0
+) -> PositionSample:
+    """EXPRACE: exact non-uniform Poisson sample positions via a thinned
+    Poisson process (module docstring). Fully vectorized, exact for all
+    p in [0, 1].
+
+    w:     (R,) int64   flatten weight of each root tuple (0 = dangling)
+    p:     (R,) float   sampling probability of each root tuple (t[y])
+    prefE: (R+1,) int64 exclusive prefix of w; prefE[-1] = join size n
+    cap:        output position capacity
+    arrival_cap: scratch capacity for raw Poisson arrivals (default: cap;
+        needs >= ln2/min(p,1-p)-adjusted slack — see estimate.plan_capacity)
+    """
+    acap = arrival_cap or cap
+    R = w.shape[0]
+    n = prefE[-1]
+    kM, kV = jax.random.split(key)
+    p = jnp.clip(p.astype(F64), 0.0, 1.0)
+    comp = p > 0.5                      # sample failures instead of successes
+    pi = jnp.where(comp, 1.0 - p, p)    # process probability, <= 1/2
+    lam = -jnp.log1p(-jnp.minimum(pi, 0.5))  # rate per cell, <= ln 2
+    wF = w.astype(F64)
+
+    # --- Poisson arrivals over the piecewise-constant-rate line ------------
+    massE = jnp.concatenate([jnp.zeros((1,), F64), jnp.cumsum(wF * lam)])
+    Lam = massE[-1]
+    M = jax.random.poisson(kM, Lam).astype(I64)
+    aM = jnp.minimum(M, acap)
+    v = jax.random.uniform(kV, (acap,), F64) * Lam
+    avalid = jnp.arange(acap, dtype=I64) < aM
+    r = jnp.clip(jnp.searchsorted(massE, v, side="right") - 1, 0, R - 1)
+    cell = jnp.floor((v - massE[r]) / jnp.maximum(lam[r], _TINY)).astype(I64)
+    cell = jnp.clip(cell, 0, jnp.maximum(w[r] - 1, 0))
+    gid = jnp.where(avalid, prefE[r] + cell, n)  # global cell id; pads -> n
+
+    # --- dedupe cells (>=1 arrival == one success/failure) -----------------
+    gid = jnp.sort(gid)
+    uniq = jnp.logical_and(
+        gid < n, jnp.concatenate([jnp.ones((1,), jnp.bool_), gid[1:] != gid[:-1]])
+    )
+    seg = jnp.clip(jnp.searchsorted(prefE, gid, side="right") - 1, 0, R - 1)
+    hits = jnp.zeros((R,), I64).at[seg].add(uniq.astype(I64))  # per-root count
+    k_r = jnp.where(comp, w - hits, hits)  # success count per root (exact)
+    outE = jnp.concatenate([jnp.zeros((1,), I64), jnp.cumsum(k_r)])
+    K = outE[-1]
+
+    # --- compact the unique cells, in (segment, cell) order ----------------
+    urank = jnp.cumsum(uniq.astype(I64)) - 1          # global unique rank
+    hitsE = jnp.concatenate([jnp.zeros((1,), I64), jnp.cumsum(hits)])
+    local = gid - prefE[seg]                          # cell offset in segment
+    BIGPAD = jnp.iinfo(jnp.int64).max
+    Fc = jnp.full((acap,), BIGPAD, I64)               # compacted cells
+    Gc = jnp.full((acap,), BIGPAD, I64)               # f_i - i + segment offset
+    tgt = jnp.where(uniq, urank, acap)                # dups scatter OOB (drop)
+    offE = jnp.concatenate([jnp.zeros((1,), I64), jnp.cumsum(w + 1)])
+    lrank = urank - hitsE[seg]                        # rank within segment
+    g_val = local - lrank + offE[seg]                 # globally nondecreasing
+    Fc = Fc.at[tgt].set(jnp.where(uniq, local, BIGPAD), mode="drop")
+    Gc = Gc.at[tgt].set(jnp.where(uniq, g_val, BIGPAD), mode="drop")
+
+    # --- emit output slots --------------------------------------------------
+    t = jnp.arange(cap, dtype=I64)
+    tvalid = t < jnp.minimum(K, cap)
+    rO = jnp.clip(jnp.searchsorted(outE, t, side="right") - 1, 0, R - 1)
+    l = t - outE[rO]
+    # direct: l-th unique arrival of segment rO
+    direct_pos = Fc[jnp.clip(hitsE[rO] + l, 0, acap - 1)]
+    # complement: l-th missing value among the segment's failures
+    q = l + offE[rO]
+    c = jnp.searchsorted(Gc, q, side="right") - hitsE[rO]
+    comp_pos = l + jnp.clip(c, 0, jnp.maximum(w[rO] - 1, 0) - l + 1)
+    local_out = jnp.where(comp[rO], comp_pos, direct_pos)
+    positions = prefE[rO] + jnp.clip(local_out, 0, jnp.maximum(w[rO] - 1, 0))
+    overflow = jnp.logical_or(M > acap, K > cap)
+    return _finish(positions, tvalid, n, overflow)
+
+
+def pt_bern_flat_positions(key, root_p, prefE, n: int, cap: int) -> PositionSample:
+    """Faithful PTBERN, flattened: one Bernoulli trial per flat position with
+    that position's root probability. Theta(n) — only for materializable n."""
+    flat = jnp.arange(n, dtype=I64)
+    r = jnp.clip(jnp.searchsorted(prefE, flat, side="right") - 1, 0, root_p.shape[0] - 1)
+    u = jax.random.uniform(key, (n,), F64)
+    mask = u < root_p[r]
+    total = jnp.sum(mask).astype(I64)
+    (idx,) = jnp.nonzero(mask, size=cap, fill_value=n)
+    valid = jnp.arange(cap) < jnp.minimum(total, cap)
+    return _finish(idx.astype(I64), valid, jnp.asarray(n, I64), total > cap)
+
+
+# ---------------------------------------------------------------------------
+# Paper-faithful sequential host oracles (numpy; used in tests/benchmarks)
+# ---------------------------------------------------------------------------
+
+def pt_positions_host(
+    rng: np.random.Generator, w: np.ndarray, p: np.ndarray, method: str = "hybrid"
+) -> np.ndarray:
+    """The paper's PT* loop (§5 "Non-uniform"): iterate root tuples, run the
+    uniform sampler per group, shift by the group's base offset. Sequential
+    single-core semantics — the reproduction baseline."""
+    w = np.asarray(w, np.int64)
+    p = np.asarray(p, np.float64)
+    base = np.concatenate([[0], np.cumsum(w)])
+    out = []
+    for t in range(w.shape[0]):
+        wt, pt = int(w[t]), float(p[t])
+        if wt == 0 or pt <= 0.0:
+            continue
+        m = method if method != "hybrid" else ("geo" if pt <= HYBRID_THRESHOLD else "bern")
+        if m == "bern":
+            idx = np.nonzero(rng.random(wt) < pt)[0]
+        elif m == "geo":
+            idx = []
+            i = int(np.floor(np.log(max(rng.random(), _TINY)) / np.log1p(-min(pt, 1 - 1e-15))))
+            while i < wt:
+                idx.append(i)
+                g = int(np.floor(np.log(max(rng.random(), _TINY)) / np.log1p(-min(pt, 1 - 1e-15))))
+                i += 1 + g
+            idx = np.asarray(idx, np.int64)
+        else:
+            raise ValueError(m)
+        out.append(idx + base[t])
+    if not out:
+        return np.zeros((0,), np.int64)
+    return np.concatenate(out)

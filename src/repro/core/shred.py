@@ -1,0 +1,240 @@
+"""Shredded random-access index construction (paper §4).
+
+Builds the chained (CSR) and/or unchained (USR) shredded representation of
+the 2NSA expression ``mu*(E)`` derived from a join tree, in O(|db| log |db|)
+(one argsort per tree edge — the TPU-native replacement for the paper's O(|db|)
+hash grouping; see DESIGN.md §3).
+
+Semantics note (zero-weight retention): dangling tuples are *kept* with
+weight 0 instead of being compacted away. The flatten order and prefix
+vectors are unaffected (a zero-weight tuple produces no flat tuples), which
+keeps every shape static under jit while preserving the paper's semantics
+exactly. The bottom-up weight product implements the semijoin reduction of
+the nested-semijoin build: a root tuple's weight is exactly the number of
+join tuples extending it.
+
+Canonical flatten order: root tuples in physical order; within a nested
+attribute, tuples in join-key-sorted (stable) order; combinations in the
+paper's mixed-radix order (eq. 6-7, first child least significant). CSR and
+USR share this order, so their GETs agree tuple-for-tuple.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .database import Database
+from .jointree import Atom, JoinQuery, JoinTreeNode, gyo_join_tree, reroot_for
+from .relations import Relation, dense_keys
+
+__all__ = ["ShredNode", "Shred", "build_shred", "build_plan"]
+
+I64 = jnp.int64
+I32 = jnp.int32
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ShredNode:
+    """One Sigma(Y) of the shredded representation (a join-tree node).
+
+    Arrays describing this node's rows:
+      data      Relation over this node's variables (n rows).
+      weight    (n,) int64 — flatten weight of the nested tuple at each row.
+    Arrays describing this node's role as a *child* (grouped by parent key);
+    absent (None) on the root:
+      nxt       (n,) int32 CSR same-key chain in sorted order (-1 terminates).
+      perm      (n,) int32 USR sorted-order -> row id.
+      cumw_excl (n+1,) int64 exclusive prefix of weights in sorted order.
+    Per-child link columns (tuples aligned with ``children``):
+      child_hd    (n,) int32 head row id in child (CSR).       -1 if empty.
+      child_start (n,) int64 start offset into child's sorted order (USR).
+      child_len   (n,) int32 run length in child's sorted order.
+      child_w     (n,) int64 total weight of the joining child group.
+    """
+
+    name: str
+    variables: Tuple[str, ...]
+    owned: Tuple[str, ...]  # variables this node materializes in GET output
+    data: Relation
+    weight: jnp.ndarray
+    children: Tuple["ShredNode", ...] = ()
+    nxt: Optional[jnp.ndarray] = None
+    perm: Optional[jnp.ndarray] = None
+    cumw_excl: Optional[jnp.ndarray] = None
+    child_hd: Tuple[jnp.ndarray, ...] = ()
+    child_start: Tuple[jnp.ndarray, ...] = ()
+    child_len: Tuple[jnp.ndarray, ...] = ()
+    child_w: Tuple[jnp.ndarray, ...] = ()
+
+    _ARRAY_FIELDS = ("data", "weight", "children", "nxt", "perm", "cumw_excl",
+                     "child_hd", "child_start", "child_len", "child_w")
+
+    def tree_flatten(self):
+        leaves = tuple(getattr(self, f) for f in self._ARRAY_FIELDS)
+        aux = (self.name, self.variables, self.owned)
+        return leaves, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        name, variables, owned = aux
+        return cls(name, variables, owned, *leaves)
+
+    @property
+    def num_rows(self) -> int:
+        return self.weight.shape[0]
+
+    def nodes(self) -> List["ShredNode"]:
+        out = [self]
+        for c in self.children:
+            out.extend(c.nodes())
+        return out
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Shred:
+    """The full shredded random-access index: root node + root prefix vector.
+
+    root_prefE: (n_root + 1,) int64 exclusive prefix of root weights;
+    root_prefE[-1] == |mu*(N)| == |Q(db)|.
+    """
+
+    root: ShredNode
+    root_prefE: jnp.ndarray
+    rep: str  # 'csr' | 'usr' | 'both' (static)
+
+    def tree_flatten(self):
+        return (self.root, self.root_prefE), (self.rep,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0], leaves[1], aux[0])
+
+    @property
+    def join_size(self) -> jnp.ndarray:
+        """|Q(db)| — the full join cardinality, O(1) from the index."""
+        return self.root_prefE[-1]
+
+
+def build_plan(query: JoinQuery) -> JoinTreeNode:
+    """Join tree for the query, rerooted so prob_var is flat at the root
+    (Proposition 3.1)."""
+    tree = gyo_join_tree(query)
+    if query.prob_var is not None:
+        tree = reroot_for(tree, query.prob_var)
+    return tree
+
+
+def _group_child(
+    parent_rel: Relation,
+    parent_vars: Tuple[str, ...],
+    child: ShredNode,
+    rep: str,
+):
+    """Group the child by the shared join key; compute the parent's link
+    columns. This is the sort-based analogue of CSR-GROUP (paper Fig. 3) and
+    of the 2-pass USR grouping, unified (DESIGN.md §3)."""
+    join_vars = sorted(set(parent_vars) & set(child.variables))
+    m = parent_rel.num_rows
+    n = child.num_rows
+    if join_vars:
+        kp, kc = dense_keys(
+            [parent_rel.column(v) for v in join_vars],
+            [child.data.column(v) for v in join_vars],
+        )
+    else:  # cross product: single group
+        kp = jnp.zeros((m,), I64)
+        kc = jnp.zeros((n,), I64)
+
+    order = jnp.argsort(kc, stable=True).astype(I32)  # sorted pos -> row id
+    kc_sorted = kc[order]
+    w_sorted = child.weight[order]
+    cumw_incl = jnp.cumsum(w_sorted)
+    cumw_excl = jnp.concatenate([jnp.zeros((1,), I64), cumw_incl])
+
+    # Parent lookup: run boundaries of each parent's key in the sorted child.
+    s = jnp.searchsorted(kc_sorted, kp, side="left")
+    e = jnp.searchsorted(kc_sorted, kp, side="right")
+    child_len = (e - s).astype(I32)
+    child_w = cumw_excl[e] - cumw_excl[s]
+    child_start = s.astype(I64)
+    # CSR head: first row (in sorted order) of the run; -1 when the run is empty.
+    if n == 0:
+        child_hd = jnp.full((m,), -1, I32)
+    else:
+        child_hd = jnp.where(e > s, order[jnp.minimum(s, n - 1)], -1).astype(I32)
+
+    nxt = None
+    if rep in ("csr", "both"):
+        # nxt[row] = successor row in the same-key sorted run, else -1.
+        same_next = jnp.concatenate(
+            [kc_sorted[1:] == kc_sorted[:-1], jnp.zeros((1,), jnp.bool_)]
+        )
+        succ = jnp.concatenate([order[1:], jnp.full((1,), -1, I32)])
+        nxt_sorted = jnp.where(same_next, succ, -1).astype(I32)
+        nxt = jnp.zeros((n,), I32).at[order].set(nxt_sorted)
+
+    perm = order if rep in ("usr", "both") else None
+    cume = cumw_excl if rep in ("usr", "both") else None
+    return child_hd, child_start, child_len, child_w, nxt, perm, cume
+
+
+def _build_node(
+    tnode: JoinTreeNode, db: Database, rep: str, owned_above: frozenset
+) -> ShredNode:
+    rel = db.instance_for(tnode.atom)
+    rel.validate()
+    variables = tuple(tnode.atom.variables)
+    owned = tuple(v for v in dict.fromkeys(variables) if v not in owned_above)
+    below = owned_above | set(variables)
+
+    children: List[ShredNode] = []
+    for c in tnode.children:
+        children.append(_build_node(c, db, rep, below))
+
+    n = rel.num_rows
+    weight = jnp.ones((n,), I64)
+    hds, starts, lens, ws = [], [], [], []
+    new_children = []
+    for child in children:
+        hd, st, ln, w, nxt, perm, cume = _group_child(rel, variables, child, rep)
+        hds.append(hd)
+        starts.append(st)
+        lens.append(ln)
+        ws.append(w)
+        new_children.append(
+            dataclasses.replace(child, nxt=nxt, perm=perm, cumw_excl=cume)
+        )
+        weight = weight * w  # zero-weight propagation == semijoin reduction
+
+    return ShredNode(
+        name=tnode.atom.name,
+        variables=variables,
+        owned=owned,
+        data=rel.project(tuple(dict.fromkeys(variables))),
+        weight=weight,
+        children=tuple(new_children),
+        child_hd=tuple(hds),
+        child_start=tuple(starts),
+        child_len=tuple(lens),
+        child_w=tuple(ws),
+    )
+
+
+def build_shred(db: Database, query: JoinQuery, rep: str = "usr") -> Shred:
+    """Construct the random-access index (Proposition 4.4 / 4.5).
+
+    rep='csr'  — chained representation (linked lists; paper's default).
+    rep='usr'  — unchained representation (perm + prefix; TPU default).
+    rep='both' — build both sets of link columns (shared grouping pass).
+    """
+    if rep not in ("csr", "usr", "both"):
+        raise ValueError(f"rep must be csr|usr|both, got {rep!r}")
+    plan = build_plan(query)
+    root = _build_node(plan, db, rep, frozenset())
+    prefE = jnp.concatenate([jnp.zeros((1,), I64), jnp.cumsum(root.weight)])
+    return Shred(root=root, root_prefE=prefE, rep=rep)

@@ -1,0 +1,3 @@
+"""Data pipeline: deterministic, resumable, with the paper's Poisson-join
+sampler as a first-class batch source."""
+from .pipeline import PoissonJoinSource, SyntheticLMSource, make_corpus_db  # noqa: F401

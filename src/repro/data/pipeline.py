@@ -1,0 +1,151 @@
+"""Training-data pipeline built on Poisson sampling over acyclic joins.
+
+This is where the paper becomes a *training-framework feature* (DESIGN.md
+§2): the corpus is a relational database — e.g.
+
+    Doc(doc, clust)                 one row per document
+    ClusterQuality(clust, p)        data-curation probability per cluster
+
+and each training step draws an independent Poisson sample of the join
+``beta_p(Doc |><| ClusterQuality)`` — quality-weighted data selection with
+*fresh randomness every step* (the Monte-Carlo pattern of the paper's EpiQL
+engine), without materializing the joined corpus. The shredded index is
+built once; a step costs O(k log |db|).
+
+Determinism/resume: batch(step) depends only on (seed, step), so restarts
+resume mid-epoch exactly (checkpoint stores just the step counter), and
+elastic re-sharding cannot skew the sampling distribution.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Atom, Database, JoinQuery, PoissonSampler
+
+
+def make_corpus_db(
+    n_docs: int,
+    n_clusters: int,
+    seq_len: int,
+    vocab: int,
+    seed: int = 0,
+    mean_quality: float = 0.3,
+) -> Database:
+    """A synthetic relational corpus: documents with cluster-level quality
+    scores (stand-in for dedup/quality pipelines)."""
+    rng = np.random.default_rng(seed)
+    return Database.from_columns({
+        "Doc": {
+            "doc": np.arange(n_docs),
+            "clust": rng.integers(0, n_clusters, n_docs),
+        },
+        "ClusterQuality": {
+            "clust": np.arange(n_clusters),
+            "p": np.clip(rng.beta(2, 2 / mean_quality - 2, n_clusters), 0, 1),
+        },
+        # token payloads live beside the relations (column-store style)
+        "_tokens": {"flat": rng.integers(0, vocab, n_docs * seq_len)},
+    })
+
+
+class PoissonJoinSource:
+    """Batches of token sequences selected by Poisson sampling over a join.
+
+    Each step: sample doc ids via Index-and-Probe, take the first
+    ``batch`` valid ids (wrapping deterministically if the sample is small),
+    gather their token rows.
+    """
+
+    def __init__(self, db: Database, seq_len: int, batch: int, seed: int = 0,
+                 query: Optional[JoinQuery] = None, doc_var: str = "doc"):
+        self.query = query or JoinQuery(
+            (Atom.of("ClusterQuality", "clust", "p"),
+             Atom.of("Doc", "doc", "clust")),
+            prob_var="p")
+        self.sampler = PoissonSampler(db, self.query)
+        n_docs = db.relations["Doc"].num_rows
+        self.tokens = db.relations["_tokens"].column("flat").reshape(n_docs, seq_len)
+        self.seq_len = seq_len
+        self.batch = batch
+        self.doc_var = doc_var
+        self.seed = seed
+        self.key = jax.random.key(seed)
+        cap = self.sampler.default_capacity()
+        self.cap = max(cap, ((batch + 127) // 128) * 128)
+
+    def batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
+        """Deterministic in (seed, step) — the resume/elasticity contract."""
+        key = jax.random.fold_in(self.key, step)
+        sample = self.sampler.sample(key, cap=self.cap)
+        docs = sample.columns[self.doc_var]
+        count = jnp.maximum(sample.count, 1)
+        idx = jnp.arange(self.batch) % count          # wrap if sample < batch
+        chosen = jnp.take(docs, idx)
+        toks = jnp.take(self.tokens, chosen, axis=0).astype(jnp.int32)
+        return {
+            "tokens": toks[:, :-1],
+            "targets": toks[:, 1:],
+            "sampled_k": sample.count,
+        }
+
+    def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+class SyntheticLMSource:
+    """Pure-random token batches (model-only benchmarking), deterministic in
+    (seed, step)."""
+
+    def __init__(self, vocab: int, seq_len: int, batch: int, seed: int = 0,
+                 extra_specs: Optional[Dict] = None):
+        self.vocab, self.seq_len, self.batch = vocab, seq_len, batch
+        self.key = jax.random.key(seed)
+        self.extra_specs = extra_specs or {}
+
+    def batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
+        key = jax.random.fold_in(self.key, step)
+        toks = jax.random.randint(key, (self.batch, self.seq_len + 1), 0,
+                                  self.vocab, jnp.int32)
+        out = {"tokens": toks[:, :-1], "targets": toks[:, 1:]}
+        for name, spec in self.extra_specs.items():
+            out[name] = jax.random.normal(jax.random.fold_in(key, 1),
+                                          spec.shape, spec.dtype)
+        return out
+
+
+class Prefetcher:
+    """Background-thread prefetch (double buffering) over a step-indexed
+    source; safe to restart from any step."""
+
+    def __init__(self, source, start_step: int = 0, depth: int = 2):
+        self.source = source
+        self.q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self.step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _work(self):
+        s = self.step
+        while not self._stop.is_set():
+            try:
+                self.q.put((s, self.source.batch_at(s)), timeout=0.5)
+                s += 1
+            except queue.Full:
+                continue
+
+    def __next__(self):
+        s, b = self.q.get()
+        return s, b
+
+    def stop(self):
+        self._stop.set()

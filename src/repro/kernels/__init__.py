@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+    bsearch_probe  bulk binary search into prefix vectors (USR-GET inner loop)
+    prefix_sum     carry-chained weights -> pref vector (index build)
+    geo_gaps       fused GEO position generation (uniform sampling)
+    flash_decode   online-softmax decode attention (serving, long KV)
+
+Wrappers + fallbacks live in ops.py; pure-jnp oracles in ref.py. Kernels are
+written for TPU (BlockSpec VMEM tiling) and validated with interpret=True on
+CPU in this container.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: bulk binary search of probe offsets into a prefix
+vector — the inner loop of USR-GET (paper Fig. 5 line 7) and of root
+location (Fig. 4 line 3).
+
+For a sorted exclusive-prefix array ``pref`` (pref[0] = 0) and a batch of
+probe offsets ``q``, computes for each lane the largest j with
+pref[j] <= q — i.e. ``searchsorted(pref, q, 'right') - 1`` — using the
+branchless power-of-two descent (one VMEM gather per step, log2(N) steps,
+no divergent control flow, which is what the VPU wants).
+
+Tiling: queries are tiled (BQ_ROWS, 128) into VMEM; the prefix table is kept
+wholly VMEM-resident (BlockSpec index_map pinned to block 0). A 16 MiB v5e
+VMEM comfortably holds 2^21 int32 prefix entries + tiles; the ops.py wrapper
+falls back to XLA searchsorted above that (and for int64 offsets — TPU has
+no native int64 gathers; joins > 2^31 use the fallback, see DESIGN.md §8).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 8  # (8, 128) int32 query tile
+
+
+def _kernel(pref_ref, q_ref, out_ref, *, steps: int, np_len: int):
+    q = q_ref[...]
+    pref = pref_ref[...]
+    pos = jnp.zeros(q.shape, jnp.int32)
+    # Invariant: pref[pos] <= q (pref[0] == 0 <= q). Descend set bits.
+    for k in range(steps - 1, -1, -1):
+        cand = pos + (1 << k)
+        val = jnp.take(pref, jnp.minimum(cand, np_len - 1), axis=0)
+        take = jnp.logical_and(cand < np_len, val <= q)
+        pos = jnp.where(take, cand, pos)
+    out_ref[...] = pos
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def bsearch_probe(
+    pref: jnp.ndarray,
+    q: jnp.ndarray,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """pref: (NP,) int32 sorted with pref[0]==0; q: (R, 128) int32.
+    Returns (R, 128) int32: max j with pref[j] <= q."""
+    assert q.ndim == 2 and q.shape[1] == 128, q.shape
+    np_len = pref.shape[0]
+    steps = max(1, math.ceil(math.log2(max(np_len, 2))))
+    rows = q.shape[0]
+    grid = (pl.cdiv(rows, block_rows),)
+    return pl.pallas_call(
+        functools.partial(_kernel, steps=steps, np_len=np_len),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((np_len,), lambda i: (0,)),          # whole table
+            pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.int32),
+        interpret=interpret,
+    )(pref, q)

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: fused GEO position generation (paper Fig. 6,
+vectorized — DESIGN.md §3).
+
+One pass fuses the three stages of the vectorized GEO sampler:
+    gap  = floor(ln u / ln(1-p))          (inverse-CDF geometric draw)
+    pos  = running_sum(gap + 1) - 1       (carry-chained, like prefix_sum)
+so the uniforms tile is read once from VMEM and positions stream out —
+instead of three XLA passes (log, floor-div, cumsum) over HBM.
+
+p arrives as a (1, 1) operand pinned to SMEM-like replication (every grid
+step sees the same scalar block).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_ROWS = 64
+
+
+def _kernel(p_ref, u_ref, out_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[0] = jnp.zeros((), jnp.int32)
+
+    p = p_ref[0, 0]
+    u = u_ref[...]
+    inv = 1.0 / jnp.log1p(-jnp.clip(p, 1e-12, 1.0 - 1e-7))
+    gaps = jnp.floor(jnp.log(jnp.maximum(u, 1e-12)) * inv)
+    step = jnp.minimum(gaps, 2_000_000_000.0).astype(jnp.int32) + 1
+    row_sum = jnp.sum(step, axis=1)
+    row_off = jnp.cumsum(row_sum) - row_sum
+    flat = jnp.cumsum(step, axis=1) + row_off[:, None] + carry_ref[0]
+    out_ref[...] = flat - 1
+    carry_ref[0] = carry_ref[0] + jnp.sum(row_sum)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def geo_gaps_tiles(
+    u: jnp.ndarray,
+    p: jnp.ndarray,
+    *,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """u: (R, 128) float32 uniforms in (0,1); p: () probability.
+    Returns (R, 128) int32 candidate positions (ascending, flat order)."""
+    assert u.ndim == 2 and u.shape[1] == 128, u.shape
+    rows = u.shape[0]
+    grid = (pl.cdiv(rows, block_rows),)
+    p2 = jnp.asarray(p, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(u.shape, jnp.int32),
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(p2, u)

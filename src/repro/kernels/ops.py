@@ -1,0 +1,101 @@
+"""Public jitted wrappers around the Pallas kernels.
+
+Each wrapper owns layout plumbing (1-D <-> (rows, 128) retiling, padding)
+and the documented fallbacks:
+  * int64 offsets (joins > 2^31) fall back to XLA searchsorted/cumsum —
+    TPU has no native 64-bit gathers (DESIGN.md §8);
+  * prefix tables too large for VMEM fall back likewise.
+``interpret=True`` everywhere in this container (CPU); on real TPUs the flag
+flips to False via the REPRO_PALLAS_INTERPRET env var.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from . import ref as _ref
+from .bsearch_probe import bsearch_probe as _bsearch_tiles
+from .geo_gaps import geo_gaps_tiles as _geo_tiles
+from .prefix_sum import prefix_sum_tiles as _prefix_tiles
+from .flash_decode import flash_decode as _flash_decode
+from .flash_prefill import flash_prefill as _flash_prefill
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+_VMEM_PREF_LIMIT = 1 << 21  # int32 prefix entries kept fully VMEM-resident
+
+
+def _to_tiles(x: jnp.ndarray, fill) -> jnp.ndarray:
+    n = x.shape[0]
+    rows = -(-n // 128)
+    pad = rows * 128 - n
+    return jnp.pad(x, (0, pad), constant_values=fill).reshape(rows, 128)
+
+
+def searchsorted_prefix(pref: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Bulk 'locate offset in prefix vector': max j with pref[j] <= q.
+
+    Pallas fast path for int32-representable tables; XLA fallback otherwise.
+    """
+    n = q.shape[0]
+    if (pref.dtype == jnp.int64 or q.dtype == jnp.int64
+            or pref.shape[0] > _VMEM_PREF_LIMIT):
+        return jnp.maximum(jnp.searchsorted(pref, q, side="right") - 1, 0)
+    tiles = _to_tiles(q.astype(jnp.int32), 0)
+    out = _bsearch_tiles(pref.astype(jnp.int32), tiles, interpret=INTERPRET)
+    return out.reshape(-1)[:n]
+
+
+def prefix_sum(x: jnp.ndarray, exclusive: bool = False) -> jnp.ndarray:
+    """Prefix sum of a 1-D vector (the index's pref column)."""
+    n = x.shape[0]
+    if x.dtype == jnp.int64:
+        s = jnp.cumsum(x)
+    else:
+        s = _prefix_tiles(_to_tiles(x, 0), interpret=INTERPRET).reshape(-1)[:n]
+    if exclusive:
+        s = jnp.concatenate([jnp.zeros((1,), s.dtype), s[:-1]])
+    return s
+
+
+def geo_positions_fused(u: jnp.ndarray, p) -> jnp.ndarray:
+    """Fused uniform->geometric->positions transform (ascending int32)."""
+    n = u.shape[0]
+    tiles = _to_tiles(u.astype(jnp.float32), 1.0 - 1e-7)
+    return _geo_tiles(tiles, p, interpret=INTERPRET).reshape(-1)[:n]
+
+
+def decode_attention(q, k, v, bias=None, *, block_s: int = 512) -> jnp.ndarray:
+    """Online-softmax decode attention; pads S up to a block multiple."""
+    B, H, D = q.shape
+    _, KV_H, S, _ = k.shape
+    if bias is None:
+        bias = jnp.zeros((B, S), jnp.float32)
+    pad = (-S) % block_s
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        bias = jnp.pad(bias, ((0, 0), (0, pad)), constant_values=-1e30)
+    return _flash_decode(q, k, v, bias, block_s=block_s, interpret=INTERPRET)
+
+
+def prefill_attention(q, k, v, *, causal: bool = True,
+                      block_q: int = 256, block_k: int = 512) -> jnp.ndarray:
+    """Causal flash attention over full sequences (train/prefill); pads S up
+    to the block lcm."""
+    B, H, S, D = q.shape
+    import math
+    step = math.lcm(block_q, block_k)
+    pad = (-S) % step
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    out = _flash_prefill(q, k, v, causal=causal, block_q=block_q,
+                         block_k=block_k, interpret=INTERPRET)
+    return out[:, :, :S]
+
+
+# Re-export oracles so tests can write ops.X vs ops.ref.X_ref.
+ref = _ref

@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bsearch_probe_ref(pref: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
+    """Max j with pref[j] <= q, elementwise over q."""
+    flat = jnp.searchsorted(pref, q.reshape(-1), side="right") - 1
+    return jnp.maximum(flat, 0).reshape(q.shape).astype(jnp.int32)
+
+
+def prefix_sum_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """Inclusive prefix sum in flat row-major order, same tile shape."""
+    return jnp.cumsum(x.reshape(-1)).reshape(x.shape).astype(x.dtype)
+
+
+def geo_gaps_ref(u: jnp.ndarray, p) -> jnp.ndarray:
+    """Fused geometric-gap positions (flat row-major running positions)."""
+    p = jnp.clip(jnp.asarray(p, jnp.float32), 1e-12, 1.0 - 1e-7)
+    gaps = jnp.floor(jnp.log(jnp.maximum(u, 1e-12)) / jnp.log1p(-p))
+    step = jnp.minimum(gaps, 2_000_000_000.0).astype(jnp.int32) + 1
+    return (jnp.cumsum(step.reshape(-1)) - 1).reshape(u.shape).astype(jnp.int32)
+
+
+def flash_decode_ref(q, k, v, bias) -> jnp.ndarray:
+    """Dense decode attention with GQA: q (B,H,D), k/v (B,KV_H,S,D), bias (B,S)."""
+    B, H, D = q.shape
+    _, KV_H, S, _ = k.shape
+    group = H // KV_H
+    kx = jnp.repeat(k, group, axis=1).astype(jnp.float32)   # (B,H,S,D)
+    vx = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    logits = jnp.einsum("bhd,bhsd->bhs", q.astype(jnp.float32), kx) / (D ** 0.5)
+    logits = logits + bias[:, None, :]
+    w = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    return jnp.einsum("bhs,bhsd->bhd", w, vx).astype(q.dtype)
+
+
+def flash_prefill_ref(q, k, v, causal=True) -> jnp.ndarray:
+    """Dense (causal) attention with GQA: q (B,H,S,D), k/v (B,KV,S,D)."""
+    B, H, S, D = q.shape
+    KV = k.shape[1]
+    group = H // KV
+    kx = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vx = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx) / (D ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask[None, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, vx).astype(q.dtype)

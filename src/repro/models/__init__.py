@@ -1,0 +1,13 @@
+"""repro.models — the 10 assigned architectures as one pattern-driven stack.
+
+Public API:
+    ModelConfig                       (config.py)
+    init_model, forward, loss_fn,
+    init_cache, decode_step, prefill, encode   (transformer.py)
+    param_specs, shardings_for        (layers.py — sharding rules)
+"""
+from .config import ModelConfig  # noqa: F401
+from .layers import param_specs, shardings_for  # noqa: F401
+from .transformer import (  # noqa: F401
+    decode_step, encode, forward, init_cache, init_model, loss_fn, prefill,
+)

@@ -1,0 +1,245 @@
+"""Attention blocks: GQA self-attention (full / windowed causal /
+bidirectional), cross-attention, and single-token decode.
+
+Train / prefill use *blockwise attention*: a lax.scan over KV chunks with an
+online softmax — O(S * chunk) live memory instead of the O(S^2) score
+matrix, which is what makes the 32k-prefill shapes compile within HBM and is
+the pure-JAX twin of the Pallas flash_decode kernel (kernels/flash_decode.py
+is the TPU fast path for the decode case; the XLA path here is what the
+dry-run lowers, since interpret-mode Pallas would unroll its grid into HLO).
+
+Decode uses a dense masked einsum over the KV cache: with one query token
+the score tensor is (B, H, T) — tiny — so chunking buys nothing.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import (Initializer, Params, dtype_of, rope, shard_batch,
+                     shard_batch_seq)
+
+NEG_INF = -1e30
+
+
+def init_attention(ini: Initializer, path: str, cfg: ModelConfig,
+                   cross: bool = False) -> Params:
+    d, hd = cfg.d_model, cfg.hd
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    p = {
+        "wq": ini.normal(f"{path}/wq", (d, H * hd)),
+        "wk": ini.normal(f"{path}/wk", (d, KV * hd)),
+        "wv": ini.normal(f"{path}/wv", (d, KV * hd)),
+        "wo": ini.normal(f"{path}/wo", (H * hd, d)),
+    }
+    if cross:
+        p["c_wq"] = ini.normal(f"{path}/c_wq", (d, H * hd))
+        p["c_wk"] = ini.normal(f"{path}/c_wk", (d, KV * hd))
+        p["c_wv"] = ini.normal(f"{path}/c_wv", (d, KV * hd))
+        p["c_wo"] = ini.normal(f"{path}/c_wo", (H * hd, d))
+    return p
+
+
+def _project_qkv(p, x, cfg: ModelConfig, prefix: str = ""):
+    dt = dtype_of(cfg.compute_dtype)
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p[prefix + "wq"].astype(dt)).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dh->bsh", x, p[prefix + "wk"].astype(dt)).reshape(B, S, KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", x, p[prefix + "wv"].astype(dt)).reshape(B, S, KV, hd)
+    return q, k, v
+
+
+def blockwise_attention(
+    q: jnp.ndarray,            # (B, S, H, hd)
+    k: jnp.ndarray,            # (B, T, KV, hd)
+    v: jnp.ndarray,            # (B, T, KV, hd)
+    q_pos: jnp.ndarray,        # (S,) absolute positions of queries
+    kv_pos: jnp.ndarray,       # (T,)
+    *,
+    causal: bool,
+    window: int = 0,
+    chunk: int = 1024,
+    seq_shard: bool = False,
+    head_shard: bool = False,
+    probs_bf16: bool = False,
+) -> jnp.ndarray:
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = hd ** -0.5
+    acc_dt = jnp.bfloat16 if probs_bf16 else jnp.float32
+    if seq_shard:
+        # sequence-parallel attention: queries sharded on the model axis,
+        # K/V replicated across it — no sharded-contraction psums.
+        q = shard_batch_seq(q, 1)
+        k = shard_batch(k)
+        v = shard_batch(v)
+    if head_shard:
+        # GQA group-parallel attention (§Perf H1): shard the per-KV-group
+        # query-head dim G over "model" (llama3-405b: G=16 == axis size),
+        # replicate K/V (tiny: KV heads only). Scores/probs/PV stay local;
+        # the only collective left is wo's standard row-parallel psum.
+        # Heads are interpreted g-MAJOR so the TP projection's contiguous
+        # column shards coincide exactly with G blocks — the constraint is
+        # then a no-op relabeling, not a reshard (this exact mismatch cost
+        # 5.6TB of involuntary all-gathers in H1 attempt 2; see §Perf).
+        qg = (q.reshape(B, S, G, KV, hd).transpose(0, 1, 3, 2, 4)
+              .astype(acc_dt) * scale)
+        from .layers import _BATCH_AXES, _SEQ_AXIS
+        if _BATCH_AXES and _SEQ_AXIS:
+            from jax.sharding import PartitionSpec as P
+            qg = jax.lax.with_sharding_constraint(
+                qg, P(_BATCH_AXES, None, None, _SEQ_AXIS, None))
+            k = shard_batch(k)
+            v = shard_batch(v)
+    else:
+        qg = q.reshape(B, S, KV, G, hd).astype(acc_dt) * scale
+
+    chunk = min(chunk, T)
+    pad = (-T) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=-10**9)
+    nC = (T + pad) // chunk
+    ks = k.reshape(B, nC, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, nC, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    ps = kv_pos.reshape(nC, chunk)
+
+    # NOTE the inner checkpoint: without it the chunk scan saves the (S x
+    # chunk) probability tensors of EVERY chunk for backward — O(S*T) live
+    # memory, the exact blow-up blockwise attention exists to avoid. With it
+    # the backward recomputes each chunk's probs from (q, k-chunk) — the
+    # flash-attention recompute schedule.
+    @jax.checkpoint
+    def body(carry, inp):
+        m, l, acc = carry
+        kc, vc, pc = inp
+        s = jnp.einsum("bskgh,bckh->bskgc", qg, kc.astype(acc_dt)
+                       ).astype(jnp.float32)
+        valid = pc[None, :] >= 0 if not causal else pc[None, :] <= q_pos[:, None]
+        valid = jnp.logical_and(valid, pc[None, :] >= 0)
+        if window > 0:
+            valid = jnp.logical_and(valid, pc[None, :] > q_pos[:, None] - window)
+        s = jnp.where(valid[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        prob = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(prob, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bskgc,bckh->bskgh", prob.astype(acc_dt), vc.astype(acc_dt)
+            ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, KV, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, KV, G), jnp.float32)
+    a0 = jnp.zeros((B, S, KV, G, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, ps))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    if head_shard:  # back to the g-major flattened layout wo expects
+        out = out.transpose(0, 1, 3, 2, 4)  # (B,S,G,KV,hd)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def self_attention(
+    p: Params, x, cfg: ModelConfig, positions, *, causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    """Full-sequence self attention (train / prefill)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, x, cfg)
+    q = rope(q, positions[None, :], cfg.rope_theta)
+    k = rope(k, positions[None, :], cfg.rope_theta)
+    out = blockwise_attention(q, k, v, positions, positions, causal=causal,
+                              window=window, chunk=cfg.attn_chunk,
+                              seq_shard=cfg.attn_seq_shard,
+                              head_shard=cfg.attn_head_shard,
+                              probs_bf16=cfg.attn_probs_bf16)
+    dt = dtype_of(cfg.compute_dtype)
+    out = out.reshape(B, S, -1)
+    if cfg.attn_seq_shard:
+        out = shard_batch(out)  # gather S back before the row-parallel wo
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(dt)), (k, v)
+
+
+def cross_attention(p: Params, x, memory_kv, cfg: ModelConfig) -> jnp.ndarray:
+    """x attends to a precomputed (k, v) of the encoder memory."""
+    dt = dtype_of(cfg.compute_dtype)
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    mk, mv = memory_kv  # (B, M, KV, hd)
+    M = mk.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, p["c_wq"].astype(dt)).reshape(B, S, H, hd)
+    pos_q = jnp.arange(S)
+    pos_m = jnp.arange(M)
+    out = blockwise_attention(q, mk, mv, pos_q, pos_m, causal=False,
+                              chunk=cfg.attn_chunk)
+    return jnp.einsum("bsh,hd->bsd", out.reshape(B, S, -1), p["c_wo"].astype(dt))
+
+
+def memory_kv(p: Params, memory, cfg: ModelConfig):
+    """Project encoder memory once (prefill) for later cross attention."""
+    dt = dtype_of(cfg.compute_dtype)
+    B, M, _ = memory.shape
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    mk = jnp.einsum("bmd,dh->bmh", memory, p["c_wk"].astype(dt)).reshape(B, M, KV, hd)
+    mv = jnp.einsum("bmd,dh->bmh", memory, p["c_wv"].astype(dt)).reshape(B, M, KV, hd)
+    return mk, mv
+
+
+def decode_self_attention(
+    p: Params, x, cfg: ModelConfig, cache: Dict[str, jnp.ndarray], cur: jnp.ndarray,
+    *, window: int = 0,
+) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """One-token decode with KV cache update.
+
+    cache: {"k","v"} of shape (B, T, KV, hd); cur = current length (scalar).
+    Dense masked einsum — (B, H, T) scores; see module docstring.
+    """
+    dt = dtype_of(cfg.compute_dtype)
+    B, S, _ = x.shape
+    assert S == 1
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    q, k, v = _project_qkv(p, x, cfg)
+    pos = jnp.full((1,), cur, jnp.int32)
+    q = rope(q, pos[None, :], cfg.rope_theta)
+    k = rope(k, pos[None, :], cfg.rope_theta)
+    zero = jnp.zeros((), jnp.int32)
+    cur32 = jnp.asarray(cur, jnp.int32)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (zero, cur32, zero, zero))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (zero, cur32, zero, zero))
+    T = ck.shape[1]
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bkgh,btkh->bkgt", qg, ck.astype(jnp.float32))
+    tpos = jnp.arange(T)
+    valid = tpos <= cur
+    if window > 0:
+        valid = jnp.logical_and(valid, tpos > cur - window)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", w, cv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * hd).astype(x.dtype)
+    y = jnp.einsum("bsh,hd->bsd", out, p["wo"].astype(dt))
+    return y, {"k": ck, "v": cv}
+
+
+def decode_cross_attention(p: Params, x, cfg: ModelConfig, cache) -> jnp.ndarray:
+    """Decode-time cross attention against cached memory KV."""
+    dt = dtype_of(cfg.compute_dtype)
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    G = H // KV
+    q = jnp.einsum("bsd,dh->bsh", x, p["c_wq"].astype(dt)).reshape(B, KV, G, hd)
+    s = jnp.einsum("bkgh,bmkh->bkgm", q.astype(jnp.float32) * hd ** -0.5,
+                   cache["ck"].astype(jnp.float32))
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgm,bmkh->bkgh", w, cache["cv"].astype(jnp.float32))
+    out = out.reshape(B, 1, H * hd).astype(x.dtype)
+    return jnp.einsum("bsh,hd->bsd", out, p["c_wo"].astype(dt))

@@ -1,0 +1,257 @@
+"""Core neural building blocks (pure functions over dict params) and the
+logical-axis sharding rules.
+
+Params are nested dicts of jnp arrays. Sharding is assigned by pattern
+matching on parameter *path names* (Megatron/MaxText-style logical rules):
+
+    vocab axis      -> "model"   (embed / unembed tables)
+    heads / d_ff    -> "model"   (column-parallel in, row-parallel out)
+    experts' d_ff   -> "model"   (TP-MoE default; EP variant in moe.py)
+    batch           -> ("pod", "data")
+    everything else -> replicated
+
+so tensor parallelism emerges from pjit constraint propagation: column-
+parallel matmul -> activation sharded on features -> row-parallel matmul ->
+psum, with no hand-written collectives in the model code.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from .config import ModelConfig
+
+Params = Dict[str, Any]
+
+
+def dtype_of(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+class Initializer:
+    """Deterministic param init: each leaf gets a key folded from its path."""
+
+    def __init__(self, key, param_dtype):
+        self.key = key
+        self.dtype = param_dtype
+
+    def _k(self, path: str):
+        h = np.uint32(abs(hash(path)) % (2 ** 31))
+        return jax.random.fold_in(self.key, h)
+
+    def normal(self, path: str, shape, scale: float = None):
+        scale = scale if scale is not None else (1.0 / np.sqrt(shape[-2] if len(shape) > 1 else shape[-1]))
+        return (jax.random.normal(self._k(path), shape, jnp.float32) * scale).astype(self.dtype)
+
+    def zeros(self, path: str, shape):
+        return jnp.zeros(shape, self.dtype)
+
+    def ones(self, path: str, shape):
+        return jnp.ones(shape, self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules
+# ---------------------------------------------------------------------------
+
+_MOE_EP = False
+
+
+def set_moe_ep(flag: bool) -> None:
+    global _MOE_EP
+    _MOE_EP = bool(flag)
+
+
+# (regex on param path, spec builder given ndim). "E" marks the stacked
+# repeat axis added by the pattern-stack (always unsharded, leading).
+# FSDP x TP: the tensor-parallel dim goes on "model"; the complementary dim
+# is sharded over "data" (ZeRO-3/FSDP — weights, grads and moments are all
+# fully sharded; XLA all-gathers each layer's weights per scan iteration).
+_RULES = [
+    (r"embed$",          lambda nd: ("model", "data")),
+    (r"unembed$",        lambda nd: ("data", "model")),
+    (r"(wq|wk|wv|wr|wg)$", lambda nd: ("data", "model")),
+    (r"wo$",             lambda nd: ("model", "data")),
+    (r"(w_up|w_gate)$",  lambda nd: ("data", "model")),
+    (r"w_down$",         lambda nd: ("model", "data")),
+    # TP-MoE default: expert ffn dim on "model". EP variant (_MOE_EP):
+    # expert dim itself on "model" — set via set_moe_ep() before param_specs.
+    (r"experts_(up|gate)$",
+     lambda nd: ("model", "data", None) if _MOE_EP else (None, "data", "model")),
+    (r"experts_down$",
+     lambda nd: ("model", None, "data") if _MOE_EP else (None, "model", "data")),
+    (r"router$",         lambda nd: (None, None)),
+    (r"(in_proj|x_proj)$", lambda nd: ("data", "model")),
+    (r"(out_proj)$",     lambda nd: ("model", "data")),
+    (r"chan_k$",         lambda nd: ("data", "model")),
+    (r"chan_v$",         lambda nd: ("model", "data")),
+    (r"(time_decay_[ab])$", lambda nd: (None, None)),
+    (r"(time_|chan_)\w*$", lambda nd: tuple(None for _ in range(nd))),
+]
+
+
+def spec_for_path(path: str, ndim: int, stacked: bool) -> P:
+    body_nd = ndim - (1 if stacked else 0)
+    for pat, fn in _RULES:
+        if re.search(pat, path):
+            spec = list(fn(body_nd))
+            spec = spec[:body_nd] + [None] * (body_nd - len(spec))
+            if stacked:
+                spec = [None] + spec
+            return P(*spec)
+    return P(*([None] * ndim))
+
+
+def param_specs(params: Params, prefix: str = "", stacked_keys=("blocks",)) -> Params:
+    """Mirror the params tree with PartitionSpecs via the path rules."""
+
+    def rec(node, path, stacked):
+        if isinstance(node, dict):
+            return {k: rec(v, f"{path}/{k}", stacked or k in stacked_keys)
+                    for k, v in node.items()}
+        return spec_for_path(path, node.ndim, stacked)
+
+    return rec(params, prefix, False)
+
+
+def shardings_for(params: Params, mesh) -> Params:
+    from jax.sharding import NamedSharding
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), param_specs(params),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def sanitize_pspecs(pspecs: Params, shapes: Params, mesh) -> Params:
+    """Drop sharding on any dim not divisible by its mesh axes (e.g. whisper's
+    51865 vocab on a 16-way axis) — rule-generated specs stay valid for every
+    architecture."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def fix(spec, shape_struct):
+        dims = list(spec) + [None] * (shape_struct.ndim - len(spec))
+        out = []
+        for d, size in zip(dims, shape_struct.shape):
+            axes = (d,) if isinstance(d, str) else tuple(d or ())
+            prod = 1
+            for a in axes:
+                prod *= sizes.get(a, 1)
+            out.append(d if (prod > 0 and size % prod == 0) else None)
+        return P(*out)
+
+    return jax.tree.map(fix, pspecs, shapes,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# --- activation sharding constraints ---------------------------------------
+# XLA's unconstrained propagation can replicate the batch through attention
+# when weights are FSDP-sharded over "data" (measured: 16x redundant compute
+# on smollm train_4k). Launchers register the mesh's batch axes here and the
+# model pins every major activation to batch-sharded layout, exactly like
+# MaxText's logical-axis constraints. No-op when unset (tests, CPU).
+_BATCH_AXES: tuple = ()
+_SEQ_AXIS: str = ""
+
+
+def set_batch_axes(axes, seq_axis: str = "model") -> None:
+    global _BATCH_AXES, _SEQ_AXIS
+    _BATCH_AXES = tuple(axes)
+    _SEQ_AXIS = seq_axis if axes else ""
+
+
+def shard_batch(x, batch_dim: int = 0):
+    if not _BATCH_AXES or x.ndim == 0 or x.shape[batch_dim] == 1:
+        return x
+    dims = [None] * x.ndim
+    dims[batch_dim] = _BATCH_AXES
+    return jax.lax.with_sharding_constraint(x, P(*dims))
+
+
+def shard_batch_seq(x, seq_dim: int = 1):
+    """Batch on (pod, data) AND sequence on the model axis — the
+    sequence-parallel attention layout (queries partition freely; no
+    TP contraction of head_dim => no per-chunk score psums)."""
+    if not _BATCH_AXES or not _SEQ_AXIS or x.ndim < 2:
+        return x
+    dims = [None] * x.ndim
+    if x.shape[0] > 1:
+        dims[0] = _BATCH_AXES
+    dims[seq_dim] = _SEQ_AXIS
+    return jax.lax.with_sharding_constraint(x, P(*dims))
+
+
+def shard_replicated_model(x, batch_dim: int = 0):
+    """Batch-sharded, explicitly replicated elsewhere (e.g. KV tensors in
+    sequence-parallel attention)."""
+    return shard_batch(x, batch_dim)
+
+
+# ---------------------------------------------------------------------------
+# Primitive layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, scale, eps: float):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def gated_mlp(p: Params, x, cfg: ModelConfig):
+    dt = dtype_of(cfg.compute_dtype)
+    u = jnp.einsum("...d,df->...f", x, p["w_up"].astype(dt))
+    if "w_gate" in p:  # SwiGLU (llama family)
+        h = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(dt))
+        u = jax.nn.silu(h) * u
+    else:              # plain GELU (starcoder2, whisper)
+        u = jax.nn.gelu(u)
+    return jnp.einsum("...f,fd->...d", u, p["w_down"].astype(dt))
+
+
+def init_mlp(ini: Initializer, path: str, d: int, ff: int, gated: bool = True) -> Params:
+    p = {
+        "w_up": ini.normal(f"{path}/w_up", (d, ff)),
+        "w_down": ini.normal(f"{path}/w_down", (ff, d)),
+    }
+    if gated:
+        p["w_gate"] = ini.normal(f"{path}/w_gate", (d, ff))
+    return p
+
+
+def init_norm(ini: Initializer, path: str, d: int) -> Params:
+    return {"scale": ini.zeros(f"{path}/scale", (d,))}
+
+
+def cross_entropy_loss(logits, targets, mask=None, z_loss: float = 1e-4):
+    """Causal-LM loss, fp32, with optional z-loss; logits may be sharded on
+    vocab (the log-softmax reduction stays einsum-friendly)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if z_loss:
+        nll = nll + z_loss * lse ** 2
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,277 @@
+"""Attention-free sequence mixers: Mamba2 (SSD, chunked) and RWKV6 (Finch).
+
+Both are O(S) in sequence length with O(1)-per-token decode state — which is
+exactly why the assignment's long_500k shape runs only for these families
+(DESIGN.md §Arch-applicability).
+
+Mamba2: the SSD chunked algorithm (intra-chunk quadratic + inter-chunk state
+scan) with scalar-per-head decay A, depthwise causal conv on (x, B, C), and
+a gated output — faithful to arXiv 2405.21060's minimal SSD formulation.
+
+RWKV6 "Finch": data-dependent per-channel decay w_t = exp(-exp(...)) via a
+low-rank (LoRA) projection of the token-shifted input, matrix-valued state
+S_h (hd x hd) per head, bonus u for the current token, plus the squared-ReLU
+channel mix. Train path is a lax.scan over time; decode is one state update.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import Initializer, Params, dtype_of, rms_norm
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD)
+# ---------------------------------------------------------------------------
+
+_CONV_K = 4
+_SSD_CHUNK = 256
+
+
+def init_mamba(ini: Initializer, path: str, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    H = cfg.ssm_heads or max(din // 64, 1)
+    n = cfg.ssm_state
+    return {
+        # in_proj emits [z (din), x (din), B (n), C (n), dt (H)]
+        "in_proj": ini.normal(f"{path}/in_proj", (d, 2 * din + 2 * n + H)),
+        "conv_w": ini.normal(f"{path}/time_conv_w", (_CONV_K, din + 2 * n), scale=0.5),
+        "A_log": ini.zeros(f"{path}/time_A_log", (H,)),
+        "D": ini.ones(f"{path}/time_D", (H,)),
+        "dt_bias": ini.zeros(f"{path}/time_dt_bias", (H,)),
+        "out_proj": ini.normal(f"{path}/out_proj", (din, d)),
+    }
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, state=None):
+    """Depthwise causal conv, kernel K. x: (B,S,C); w: (K,C).
+    state: (B, K-1, C) tail of the previous sequence (decode)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i: i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out, xp[:, -(K - 1):, :]
+
+
+def _ssd_chunked(xh, dt, B, C, A, chunk: int):
+    """SSD: y_t = C_t^T sum_{s<=t} (prod decay) B_s (dt_s x_s).
+
+    xh: (Bt, S, H, hd); dt: (Bt, S, H); B, C: (Bt, S, n); A: (H,) negative.
+    Returns y (Bt, S, H, hd) and final state (Bt, H, hd, n).
+    """
+    Bt, S, H, hd = xh.shape
+    n = B.shape[-1]
+    pad = (-S) % chunk
+    if pad:
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nC = (S + pad) // chunk
+    xh = xh.reshape(Bt, nC, chunk, H, hd)
+    dt = dt.reshape(Bt, nC, chunk, H)
+    B = B.reshape(Bt, nC, chunk, n)
+    C = C.reshape(Bt, nC, chunk, n)
+
+    da = dt * A[None, None, None, :]                 # (Bt,nC,c,H) negative
+    cum = jnp.cumsum(da, axis=2)                     # within-chunk cumulative
+
+    # intra-chunk (quadratic in chunk): L[i,j] = exp(cum_i - cum_j) (i >= j)
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # (Bt,nC,c,c,H)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(li), 0.0)
+    # scores: (C_i . B_j) * L[i,j] * dt_j
+    CB = jnp.einsum("bkin,bkjn->bkij", C, B)                  # (Bt,nC,c,c)
+    W = CB[..., None] * L * dt[:, :, None, :, :]              # (Bt,nC,i,j,H)
+    y_intra = jnp.einsum("bkijh,bkjhd->bkihd", W, xh)
+
+    # inter-chunk: carry state (H, hd, n)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)           # (Bt,nC,c,H)
+    chunk_in = jnp.einsum("bkch,bkchd,bkcn->bkhdn",
+                          dt * decay_to_end, xh, B)           # state contribution
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))                # (Bt,nC,H)
+
+    def body(state, inp):
+        cin, cdec, Cc, cumc = inp   # state: (Bt,H,hd,n)
+        y_in = jnp.einsum("bcn,bhdn,bch->bchd", Cc, state, jnp.exp(cumc))
+        state = state * cdec[:, :, None, None] + cin
+        return state, y_in
+
+    state0 = jnp.zeros((Bt, H, hd, n), jnp.float32)
+    state, y_inter = jax.lax.scan(
+        body, state0,
+        (chunk_in.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2),
+         C.transpose(1, 0, 2, 3),
+         cum.transpose(1, 0, 2, 3)))
+    y = y_intra + y_inter.transpose(1, 0, 2, 3, 4)
+    y = y.reshape(Bt, S + pad, H, hd)[:, :S]
+    return y, state
+
+
+def mamba_mixer(p: Params, x, cfg: ModelConfig, decode_cache: Dict = None,
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """x: (B,S,d). Returns (y, new_cache). Cache: conv tail + ssm state."""
+    dt_ = dtype_of(cfg.compute_dtype)
+    B_, S, d = x.shape
+    din = cfg.ssm_expand * d
+    H = cfg.ssm_heads or max(din // 64, 1)
+    hd = din // H
+    n = cfg.ssm_state
+
+    zxbcdt = jnp.einsum("bsd,dk->bsk", x, p["in_proj"].astype(dt_))
+    z, xin, Bv, Cv, dt = jnp.split(
+        zxbcdt, [din, 2 * din, 2 * din + n, 2 * din + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, Bv, Cv], axis=-1)
+    conv_state = None if decode_cache is None else decode_cache["conv"]
+    conv_out, conv_tail = _causal_conv(conv_in, p["conv_w"].astype(dt_), conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xin, Bv, Cv = jnp.split(conv_out, [din, din + n], axis=-1)
+
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    xh = xin.reshape(B_, S, H, hd).astype(jnp.float32)
+
+    if decode_cache is None:
+        y, state = _ssd_chunked(xh, dt, Bv.astype(jnp.float32),
+                                Cv.astype(jnp.float32), A, _SSD_CHUNK)
+    else:
+        # one-step recurrence: S' = S * exp(dt*A) + dt * B x^T ; y = C . S'
+        state = decode_cache["state"]
+        da = jnp.exp(dt[:, 0] * A[None, :])                       # (B,H)
+        upd = jnp.einsum("bh,bhd,bn->bhdn", dt[:, 0], xh[:, 0],
+                         Bv[:, 0].astype(jnp.float32))
+        state = state * da[:, :, None, None] + upd
+        y = jnp.einsum("bn,bhdn->bhd", Cv[:, 0].astype(jnp.float32), state)[:, None]
+
+    y = y + xh * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B_, S, din).astype(dt_) * jax.nn.silu(z)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"].astype(dt_))
+    return out, {"conv": conv_tail.astype(jnp.float32), "state": state}
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    din = cfg.ssm_expand * d
+    H = cfg.ssm_heads or max(din // 64, 1)
+    hd = din // H
+    n = cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, _CONV_K - 1, din + 2 * n), jnp.float32),
+        "state": jnp.zeros((batch, H, hd, n), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch)
+# ---------------------------------------------------------------------------
+
+_LORA = 64
+
+
+def init_rwkv(ini: Initializer, path: str, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    return {
+        "time_mix": ini.normal(f"{path}/time_mix_lerp", (5, d), scale=0.02),
+        "time_decay_w0": ini.zeros(f"{path}/time_decay_w0", (d,)),
+        "time_decay_a": ini.normal(f"{path}/time_decay_a", (d, _LORA), scale=0.02),
+        "time_decay_b": ini.normal(f"{path}/time_decay_b", (_LORA, d), scale=0.02),
+        "time_bonus": ini.zeros(f"{path}/time_bonus_u", (d,)),
+        "wr": ini.normal(f"{path}/wq", (d, d)),
+        "wk": ini.normal(f"{path}/wk", (d, d)),
+        "wv": ini.normal(f"{path}/wv", (d, d)),
+        "wg": ini.normal(f"{path}/w_gate", (d, d)),
+        "wo": ini.normal(f"{path}/wo", (d, d)),
+        "chan_mix": ini.normal(f"{path}/chan_mix_lerp", (2, d), scale=0.02),
+        "chan_k": ini.normal(f"{path}/w_up", (d, 7 * d // 2)),
+        "chan_v": ini.normal(f"{path}/w_down", (7 * d // 2, d)),
+    }
+
+
+def _wkv6_scan(r, k, v, w, u, state0):
+    """r,k,v: (B,S,H,hd); w: (B,S,H,hd) decays in (0,1); u: (H,hd).
+    state: (B,H,hd,hd)   out_t = (S + u*k_t (x) v_t)^T r_t ; S' = w*S + k (x) v
+    """
+    def body(state, inp):
+        rt, kt, vt, wt = inp  # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]            # (B,H,hd,hd)
+        full = state + u[None, :, :, None] * kv
+        out = jnp.einsum("bhk,bhkv->bhv", rt, full)
+        state = state * wt[..., :, None] + kv
+        return state, out
+
+    xs = tuple(a.transpose(1, 0, 2, 3) for a in (r, k, v, w))
+    state, out = jax.lax.scan(body, state0, xs)
+    return out.transpose(1, 0, 2, 3), state
+
+
+def rwkv_time_mix(p: Params, x, cfg: ModelConfig, cache: Dict = None):
+    dt_ = dtype_of(cfg.compute_dtype)
+    B, S, d = x.shape
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    prev = (jnp.concatenate([jnp.zeros((B, 1, d), x.dtype), x[:, :-1]], axis=1)
+            if cache is None else
+            jnp.concatenate([cache["shift_t"][:, None].astype(x.dtype), x[:, :-1]], axis=1))
+    mix = p["time_mix"].astype(jnp.float32)
+
+    def lerp(i):
+        m = mix[i][None, None, :]
+        return (x.astype(jnp.float32) * (1 - m) + prev.astype(jnp.float32) * m).astype(dt_)
+
+    r = jnp.einsum("bsd,dk->bsk", lerp(0), p["wr"].astype(dt_)).reshape(B, S, H, hd)
+    k = jnp.einsum("bsd,dk->bsk", lerp(1), p["wk"].astype(dt_)).reshape(B, S, H, hd)
+    v = jnp.einsum("bsd,dk->bsk", lerp(2), p["wv"].astype(dt_)).reshape(B, S, H, hd)
+    g = jnp.einsum("bsd,dk->bsk", lerp(3), p["wg"].astype(dt_))
+    # data-dependent decay (Finch): w = exp(-exp(w0 + lora(x)))
+    dd = jnp.einsum("bsd,dl,le->bse", lerp(4).astype(jnp.float32),
+                    p["time_decay_a"].astype(jnp.float32),
+                    p["time_decay_b"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(p["time_decay_w0"].astype(jnp.float32)[None, None] + dd))
+    w = w.reshape(B, S, H, hd)
+    u = p["time_bonus"].astype(jnp.float32).reshape(H, hd)
+
+    state0 = (jnp.zeros((B, H, hd, hd), jnp.float32) if cache is None
+              else cache["state"])
+    out, state = _wkv6_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                            v.astype(jnp.float32), w, u, state0)
+    out = (out.reshape(B, S, d) * jax.nn.silu(g.astype(jnp.float32))).astype(dt_)
+    y = jnp.einsum("bsd,dk->bsk", out, p["wo"].astype(dt_))
+    new_cache = {"shift_t": x[:, -1].astype(jnp.float32), "state": state}
+    return y, new_cache
+
+
+def rwkv_channel_mix(p: Params, x, cfg: ModelConfig, cache: Dict = None):
+    dt_ = dtype_of(cfg.compute_dtype)
+    B, S, d = x.shape
+    prev = (jnp.concatenate([jnp.zeros((B, 1, d), x.dtype), x[:, :-1]], axis=1)
+            if cache is None else
+            jnp.concatenate([cache["shift_c"][:, None].astype(x.dtype), x[:, :-1]], axis=1))
+    mix = p["chan_mix"].astype(jnp.float32)
+
+    def lerp(i):
+        m = mix[i][None, None, :]
+        return (x.astype(jnp.float32) * (1 - m) + prev.astype(jnp.float32) * m).astype(dt_)
+
+    k = jnp.einsum("bsd,df->bsf", lerp(0), p["chan_k"].astype(dt_))
+    k = jnp.square(jax.nn.relu(k))
+    y = jnp.einsum("bsf,fd->bsd", k, p["chan_v"].astype(dt_))
+    return y, {"shift_c": x[:, -1].astype(jnp.float32)}
+
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    hd = cfg.rwkv_head_dim
+    H = d // hd
+    return {
+        "shift_t": jnp.zeros((batch, d), jnp.float32),
+        "shift_c": jnp.zeros((batch, d), jnp.float32),
+        "state": jnp.zeros((batch, H, hd, hd), jnp.float32),
+    }

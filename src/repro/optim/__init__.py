@@ -1,0 +1,13 @@
+"""Optimizers + schedules (self-contained — no optax dependency).
+
+AdamW with decoupled weight decay, global-norm clipping, bias correction,
+configurable moment dtype (bf16 moments let llama3-405b train_4k fit one
+v5e pod — DESIGN.md §5), and an Adafactor-style factored second moment
+option for further memory pressure relief.
+
+Under pjit the optimizer state pytree inherits each parameter's sharding
+(ZeRO-3-equivalent: params, grads and moments are all fully sharded; there
+is no separate replicated optimizer copy).
+"""
+from .adamw import AdamWConfig, adamw_init, adamw_update, clip_by_global_norm  # noqa: F401
+from .schedule import warmup_cosine  # noqa: F401

@@ -1,0 +1,93 @@
+"""AdamW (+ optional factored second moment), pure-pytree implementation."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"        # "bfloat16" halves optimizer HBM
+    factored: bool = False               # Adafactor-style v for matrices
+
+
+def _mdt(cfg: AdamWConfig):
+    return jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+
+
+def adamw_init(cfg: AdamWConfig, params):
+    mdt = _mdt(cfg)
+
+    def init_v(p):
+        if cfg.factored and p.ndim >= 2:
+            return {"vr": jnp.zeros(p.shape[:-1], mdt),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], mdt)}
+        return jnp.zeros_like(p, mdt)
+
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(lambda p: jnp.zeros_like(p, mdt), params),
+        "v": jax.tree.map(init_v, params),
+    }
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    g2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    norm = jnp.sqrt(g2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state, lr_scale=1.0):
+    """One AdamW step. Returns (params, state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** t
+    bc2 = 1.0 - cfg.b2 ** t
+    lr = cfg.lr * lr_scale
+    mdt = _mdt(cfg)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * cfg.b1 + g32 * (1 - cfg.b1)
+        if isinstance(v, dict):  # factored second moment
+            vr = v["vr"].astype(jnp.float32) * cfg.b2 + jnp.mean(g32 * g32, axis=-1) * (1 - cfg.b2)
+            vc = v["vc"].astype(jnp.float32) * cfg.b2 + jnp.mean(g32 * g32, axis=-2) * (1 - cfg.b2)
+            vhat = (vr[..., None] * vc[..., None, :]) / jnp.maximum(
+                jnp.mean(vr, axis=-1)[..., None, None], 1e-30)
+            new_v = {"vr": vr.astype(mdt), "vc": vc.astype(mdt)}
+        else:
+            vhat = v.astype(jnp.float32) * cfg.b2 + g32 * g32 * (1 - cfg.b2)
+            new_v = vhat.astype(mdt)
+            vhat_b = vhat / bc2
+            upd_ = (m32 / bc1) / (jnp.sqrt(vhat_b) + cfg.eps)
+            newp = p.astype(jnp.float32) - lr * (upd_ + cfg.weight_decay * p.astype(jnp.float32))
+            return newp.astype(p.dtype), m32.astype(mdt), new_v
+        vhat_b = vhat / bc2
+        upd_ = (m32 / bc1) / (jnp.sqrt(vhat_b) + cfg.eps)
+        newp = p.astype(jnp.float32) - lr * (upd_ + cfg.weight_decay * p.astype(jnp.float32))
+        return newp.astype(p.dtype), m32.astype(mdt), new_v
+
+    flat_p, tree = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    # v may contain dicts (factored); flatten at param granularity
+    v_tree = state["v"]
+    flat_v = tree.flatten_up_to(v_tree)
+
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_params = tree.unflatten([o[0] for o in out])
+    new_m = tree.unflatten([o[1] for o in out])
+    new_v = tree.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+    return new_params, {"step": step, "m": new_m, "v": new_v}, metrics

@@ -1,0 +1,2 @@
+"""Distributed-optimization utilities: gradient compression, pipeline stages."""
+from .compress import compress_int8, decompress_int8, compressed_psum_grads  # noqa: F401

@@ -1,0 +1,13 @@
+"""Test-wide config.
+
+x64 is enabled for the whole test process: repro.core requires it (int64
+join offsets) and enables it on import anyway; forcing it here makes test
+ordering irrelevant. Model code is dtype-explicit and unaffected.
+
+NOTE: XLA_FLAGS --xla_force_host_platform_device_count is deliberately NOT
+set here — smoke tests and benches must see the real single device; only
+launch/dryrun.py (and explicit subprocess tests) force 512/4 devices.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

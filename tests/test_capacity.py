@@ -1,0 +1,67 @@
+"""Capacity planning + overflow semantics: the static-shape contract that
+makes the samplers jit-safe is 'overflow is always flagged, never silent'."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Atom, Database, JoinQuery, PoissonSampler, estimate, sampling
+
+
+def _db():
+    rng = np.random.default_rng(0)
+    return Database.from_columns({
+        "R": {"x": rng.integers(0, 10, 80), "p": np.full(80, 0.6)},
+        "S": {"x": rng.integers(0, 10, 120), "z": np.arange(120)},
+    })
+
+
+Q = JoinQuery((Atom.of("R", "x", "p"), Atom.of("S", "x", "z")), prob_var="p")
+
+
+def test_overflow_flagged_and_redraw_succeeds():
+    s = PoissonSampler(_db(), Q)
+    tiny = s.sample(jax.random.key(0), cap=8, acap=16)
+    assert bool(tiny.overflow), "a cap far below E[k] must flag overflow"
+    full = s.sample_auto(jax.random.key(0))
+    assert not bool(full.overflow)
+    assert int(full.count) > 8
+
+
+def test_default_capacity_rarely_overflows():
+    s = PoissonSampler(_db(), Q)
+    overflows = sum(bool(s.sample(jax.random.key(i)).overflow) for i in range(50))
+    assert overflows == 0  # 6-sigma planning: P(overflow) ~ 1e-9 per draw
+
+
+def test_capacity_planner_moments():
+    w = jnp.asarray([10, 20, 30], jnp.int64)
+    p = jnp.asarray([0.5, 0.1, 0.9], jnp.float64)
+    mean = float(estimate.expected_sample_size(w, p))
+    assert abs(mean - (5 + 2 + 27)) < 1e-9
+    var = 10 * .25 + 20 * .09 + 30 * .09
+    assert abs(float(estimate.sample_std(w, p)) - var ** .5) < 1e-9
+    cap = estimate.plan_capacity(mean, var ** .5)
+    assert cap >= mean + 6 * var ** .5
+    assert cap % 128 == 0  # TPU lane alignment
+
+
+def test_exprace_arrival_mass_bounds():
+    """Lam <= ln2 * sum(w)/... and >= E[k_direct]: the sampler's scratch is
+    within a constant factor of the output size for every p."""
+    w = jnp.asarray([100, 100, 100], jnp.int64)
+    for pv in ([0.01, 0.5, 0.99], [1.0, 0.0, 0.5]):
+        p = jnp.asarray(pv, jnp.float64)
+        mass = float(estimate.exprace_arrival_mass(w, p))
+        bound = float(jnp.sum(w * jnp.log(2.0)))
+        assert mass <= bound + 1e-9
+
+
+def test_geo_capacity_overflow_consistency():
+    """GEO with insufficient cap flags 'more beyond' and never emits
+    out-of-range positions."""
+    ps = jax.jit(sampling.geo_positions, static_argnums=(2, 3))(
+        jax.random.key(1), 0.9, 100000, 256)
+    assert bool(ps.overflow)
+    pos = np.asarray(ps.positions)[: int(ps.count)]
+    assert (pos < 100000).all() and len(pos) == 256

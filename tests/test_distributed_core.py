@@ -1,0 +1,67 @@
+"""Multi-device sharded Poisson sampling (subprocess with 4 host devices).
+
+The main test process keeps the default single-device platform (the dry-run
+is the only place that forces 512); correctness across real device shards is
+exercised in a subprocess.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import numpy as np, jax, jax.numpy as jnp
+    from repro.core import *
+    from repro.core.distributed import ShardedPoissonSampler
+
+    rng = np.random.default_rng(2)
+    NPER, NPOOL, NAGE = 90, 8, 3
+    db = Database.from_columns({
+        "Person": {"pers": np.arange(NPER), "age": rng.integers(0,NAGE,NPER),
+                   "pool": rng.integers(0,NPOOL,NPER)},
+        "ContactProb": {"pool": np.repeat(np.arange(NPOOL), NAGE*NAGE),
+                        "age1": np.tile(np.repeat(np.arange(NAGE),NAGE), NPOOL),
+                        "age2": np.tile(np.arange(NAGE), NPOOL*NAGE),
+                        "prob": rng.random(NPOOL*NAGE*NAGE)*0.3},
+    })
+    q = JoinQuery((
+        Atom.of("ContactProb", "pool", "age1", "age2", "prob"),
+        Atom.of("Person", "per1", "age1", "pool", alias="P1"),
+        Atom.of("Person", "per2", "age2", "pool", alias="P2"),
+    ), prob_var="prob")
+
+    assert len(jax.devices()) == 4, jax.devices()
+    mesh = jax.make_mesh((4,), ("data",))
+    ds = ShardedPoissonSampler(db, q, mesh, axes=("data",))
+    ref = PoissonSampler(db, q)
+    exp = ref.expected_k()
+    totals = [int(ds.sample_step(jax.random.key(i))[1]) for i in range(30)]
+    sd = float(estimate.sample_std(ref.w, ref.p))
+    z = (np.mean(totals)-exp)/(sd/30**0.5)
+    assert abs(z) < 4.5, (np.mean(totals), exp, z)
+
+    smp, _ = ds.sample_step(jax.random.key(99))
+    full = yannakakis.full_join(db, q)
+    fullset = set(zip(*[np.asarray(full[k]) for k in ("per1","per2","pool")]))
+    cnt = np.asarray(smp.count)
+    for sh in range(4):
+        c = int(cnt[sh])
+        tup = list(zip(np.asarray(smp.columns['per1'][sh])[:c],
+                       np.asarray(smp.columns['per2'][sh])[:c],
+                       np.asarray(smp.columns['pool'][sh])[:c]))
+        assert all(t in fullset for t in tup), sh
+    print("DISTRIBUTED_OK")
+""")
+
+
+@pytest.mark.slow
+def test_sharded_sampler_multidevice():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    assert "DISTRIBUTED_OK" in r.stdout

@@ -1,0 +1,105 @@
+"""Join-tree construction: GYO acyclicity, connectedness, rerooting."""
+import pytest
+
+from repro.core import Atom, JoinQuery, gyo_join_tree, is_acyclic, reroot_for
+from repro.core.jointree import JoinTreeNode
+
+
+def _connected(tree: JoinTreeNode) -> bool:
+    """Join-tree connectedness: atoms containing each variable form a subtree."""
+    nodes = tree.nodes()
+    allvars = set().union(*[set(n.atom.variables) for n in nodes])
+    for v in allvars:
+        # count connected components of the v-induced subtree
+        marked = {id(n) for n in nodes if v in n.atom.var_set()}
+
+        def comps(n, inside):
+            has = id(n) in marked
+            cnt = 1 if (has and not inside) else 0
+            for c in n.children:
+                cnt += comps(c, has)
+            return cnt
+
+        if comps(tree, False) > 1:
+            return False
+    return True
+
+
+def q(*atoms, prob=None):
+    return JoinQuery(tuple(atoms), prob_var=prob)
+
+
+class TestGYO:
+    def test_chain_acyclic(self):
+        query = q(Atom.of("R", "a", "b"), Atom.of("S", "b", "c"), Atom.of("T", "c", "d"))
+        assert is_acyclic(query)
+        assert _connected(gyo_join_tree(query))
+
+    def test_star_acyclic(self):
+        query = q(Atom.of("F", "a", "b", "c"), Atom.of("D1", "a", "x"),
+                  Atom.of("D2", "b", "y"), Atom.of("D3", "c", "z"))
+        assert is_acyclic(query)
+        tree = gyo_join_tree(query)
+        assert _connected(tree)
+        assert len(tree.nodes()) == 4
+
+    def test_triangle_cyclic(self):
+        # The paper's prototypical cyclic query R(x,y) |><| S(y,z) |><| T(z,x).
+        query = q(Atom.of("R", "x", "y"), Atom.of("S", "y", "z"), Atom.of("T", "z", "x"))
+        assert not is_acyclic(query)
+        with pytest.raises(ValueError):
+            gyo_join_tree(query)
+
+    def test_square_cyclic(self):
+        query = q(Atom.of("R", "a", "b"), Atom.of("S", "b", "c"),
+                  Atom.of("T", "c", "d"), Atom.of("U", "d", "a"))
+        assert not is_acyclic(query)
+
+    def test_self_join_aliases(self):
+        query = q(Atom.of("P", "x", "g", alias="P1"), Atom.of("P", "y", "g", alias="P2"))
+        assert is_acyclic(query)
+        assert {n.atom.name for n in gyo_join_tree(query).nodes()} == {"P1", "P2"}
+
+    def test_duplicate_alias_rejected(self):
+        with pytest.raises(ValueError):
+            q(Atom.of("P", "x"), Atom.of("P", "y"))
+
+    def test_single_atom(self):
+        tree = gyo_join_tree(q(Atom.of("R", "a", "b")))
+        assert len(tree.nodes()) == 1
+
+
+class TestReroot:
+    def test_reroot_moves_var_to_root(self):
+        query = q(Atom.of("R", "a", "b"), Atom.of("S", "b", "c"), Atom.of("T", "c", "p"))
+        tree = gyo_join_tree(query)
+        rr = reroot_for(tree, "p")
+        assert "p" in rr.atom.var_set()
+        assert {n.atom.name for n in rr.nodes()} == {"R", "S", "T"}
+        assert _connected(rr)
+
+    def test_reroot_preserves_edges(self):
+        query = q(Atom.of("F", "a", "b", "c"), Atom.of("D1", "a", "x"),
+                  Atom.of("D2", "b", "p"), Atom.of("D3", "c", "z"))
+        tree = gyo_join_tree(query)
+        rr = reroot_for(tree, "p")
+        assert rr.atom.name == "D2"
+
+        def edges(t):
+            out = set()
+            for n in t.nodes():
+                for c in n.children:
+                    out.add(frozenset((n.atom.name, c.atom.name)))
+            return out
+
+        assert edges(tree) == edges(rr)
+
+    def test_reroot_missing_var(self):
+        tree = gyo_join_tree(q(Atom.of("R", "a", "b")))
+        with pytest.raises(ValueError):
+            reroot_for(tree, "zzz")
+
+
+def test_prob_var_validation():
+    with pytest.raises(ValueError):
+        q(Atom.of("R", "a"), prob="nope")

@@ -1,0 +1,166 @@
+"""Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
+sweeping shapes and dtypes, plus hypothesis property tests."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops
+from repro.kernels import ref
+
+
+SET = dict(deadline=None, max_examples=12)
+
+
+class TestBsearchProbe:
+    @pytest.mark.parametrize("np_len", [2, 7, 64, 129, 1000])
+    @pytest.mark.parametrize("nq", [1, 5, 128, 300])
+    def test_matches_ref(self, np_len, nq):
+        rng = np.random.default_rng(np_len * 1000 + nq)
+        w = rng.integers(0, 5, np_len - 1)
+        pref = jnp.asarray(np.concatenate([[0], np.cumsum(w)]), jnp.int32)
+        total = int(pref[-1])
+        q = jnp.asarray(rng.integers(0, max(total, 1), nq), jnp.int32)
+        got = ops.searchsorted_prefix(pref, q)
+        want = ref.bsearch_probe_ref(pref, q.reshape(1, -1)).reshape(-1)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_int64_fallback(self):
+        pref = jnp.asarray([0, 2**33, 2**34], jnp.int64)
+        q = jnp.asarray([0, 2**33 - 1, 2**33, 2**34 - 1], jnp.int64)
+        got = ops.searchsorted_prefix(pref, q)
+        np.testing.assert_array_equal(np.asarray(got), [0, 0, 1, 1])
+
+    @given(st.lists(st.integers(0, 10), min_size=1, max_size=200))
+    @settings(**SET)
+    def test_property_random_weights(self, ws):
+        pref = jnp.asarray(np.concatenate([[0], np.cumsum(ws)]), jnp.int32)
+        total = int(pref[-1])
+        if total == 0:
+            return  # empty position space: nothing to probe
+        q = jnp.arange(total, dtype=jnp.int32)
+        got = np.asarray(ops.searchsorted_prefix(pref, q))
+        want = np.asarray(ref.bsearch_probe_ref(pref, q.reshape(1, -1))).reshape(-1)
+        np.testing.assert_array_equal(got, want)
+        # semantic invariant: pref[j] <= q < pref[j + 1]
+        prefn = np.asarray(pref)
+        assert (prefn[got] <= np.asarray(q)).all()
+        assert (np.asarray(q) < prefn[got + 1]).all()
+
+
+class TestPrefixSum:
+    @pytest.mark.parametrize("n", [1, 127, 128, 129, 8192, 10000])
+    @pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
+    def test_matches_ref(self, n, dtype):
+        rng = np.random.default_rng(n)
+        x = jnp.asarray(rng.integers(0, 9, n), dtype)
+        got = np.asarray(ops.prefix_sum(x))
+        want = np.cumsum(np.asarray(x)).astype(np.asarray(x).dtype)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+    def test_exclusive(self):
+        x = jnp.asarray([3, 1, 4, 1, 5], jnp.int32)
+        got = np.asarray(ops.prefix_sum(x, exclusive=True))
+        np.testing.assert_array_equal(got, [0, 3, 4, 8, 9])
+
+    def test_int64_fallback(self):
+        x = jnp.asarray([2**32, 2**32, 1], jnp.int64)
+        got = np.asarray(ops.prefix_sum(x))
+        np.testing.assert_array_equal(got, [2**32, 2**33, 2**33 + 1])
+
+    def test_block_boundary_carry(self):
+        # value exactly at tile boundaries exercises the SMEM carry chain
+        n = 64 * 128 * 2 + 1
+        x = jnp.ones((n,), jnp.int32)
+        got = np.asarray(ops.prefix_sum(x))
+        assert got[-1] == n and got[64 * 128] == 64 * 128 + 1
+
+
+class TestGeoGaps:
+    @pytest.mark.parametrize("n", [64, 128, 1000, 9000])
+    @pytest.mark.parametrize("p", [0.001, 0.1, 0.5, 0.9])
+    def test_matches_ref(self, n, p):
+        u = jax.random.uniform(jax.random.key(n), (n,), jnp.float32,
+                               minval=1e-6, maxval=1.0 - 1e-6)
+        got = np.asarray(ops.geo_positions_fused(u, p))
+        want = np.asarray(ref.geo_gaps_ref(u, p))
+        np.testing.assert_array_equal(got, want)
+
+    def test_positions_strictly_ascending(self):
+        u = jax.random.uniform(jax.random.key(0), (5000,), jnp.float32,
+                               minval=1e-6, maxval=1.0 - 1e-6)
+        pos = np.asarray(ops.geo_positions_fused(u, 0.05))
+        assert (np.diff(pos) > 0).all()
+
+
+class TestFlashDecode:
+    @pytest.mark.parametrize("B,H,KVH,S,D", [
+        (1, 4, 4, 512, 64),
+        (2, 8, 2, 1024, 64),    # GQA 4:1
+        (2, 4, 1, 2048, 128),   # MQA
+        (1, 2, 2, 640, 128),    # padded S (not block multiple)
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, B, H, KVH, S, D, dtype):
+        ks = jax.random.split(jax.random.key(B * S + H), 3)
+        q = jax.random.normal(ks[0], (B, H, D), dtype)
+        k = jax.random.normal(ks[1], (B, KVH, S, D), dtype)
+        v = jax.random.normal(ks[2], (B, KVH, S, D), dtype)
+        got = ops.decode_attention(q, k, v)
+        want = ref.flash_decode_ref(q, k, v, jnp.zeros((B, S), jnp.float32))
+        tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_bias_masking_matches_short_cache(self):
+        """-inf bias over the tail == attention over the truncated cache."""
+        B, H, S, D, L = 1, 2, 1024, 64, 700
+        ks = jax.random.split(jax.random.key(0), 3)
+        q = jax.random.normal(ks[0], (B, H, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, H, S, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, H, S, D), jnp.float32)
+        bias = jnp.where(jnp.arange(S)[None, :] < L, 0.0, -1e30).astype(jnp.float32)
+        got = ops.decode_attention(q, k, v, bias)
+        want = ref.flash_decode_ref(q, k[:, :, :L], v[:, :, :L],
+                                    jnp.zeros((B, L), jnp.float32))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_softmax_normalization(self):
+        """With v == 1, attention output must be exactly 1 (partition check)."""
+        B, H, S, D = 1, 2, 512, 64
+        q = jax.random.normal(jax.random.key(1), (B, H, D), jnp.float32)
+        k = jax.random.normal(jax.random.key(2), (B, H, S, D), jnp.float32)
+        v = jnp.ones((B, H, S, D), jnp.float32)
+        got = ops.decode_attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), 1.0, rtol=1e-5)
+
+
+class TestFlashPrefill:
+    @pytest.mark.parametrize("B,H,KVH,S,D", [
+        (1, 4, 4, 512, 64),
+        (2, 8, 2, 512, 64),     # GQA 4:1
+        (1, 4, 1, 1536, 128),   # MQA, padded S (not an lcm multiple)
+    ])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_ref(self, B, H, KVH, S, D, causal):
+        ks = jax.random.split(jax.random.key(S + H), 3)
+        q = jax.random.normal(ks[0], (B, H, S, D), jnp.float32)
+        k = jax.random.normal(ks[1], (B, KVH, S, D), jnp.float32)
+        v = jax.random.normal(ks[2], (B, KVH, S, D), jnp.float32)
+        got = ops.prefill_attention(q, k, v, causal=causal,
+                                    block_q=128, block_k=256)
+        want = ref.flash_prefill_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_causal_first_token_attends_itself_only(self):
+        B, H, S, D = 1, 2, 256, 64
+        q = jax.random.normal(jax.random.key(0), (B, H, S, D), jnp.float32)
+        k = jax.random.normal(jax.random.key(1), (B, H, S, D), jnp.float32)
+        v = jax.random.normal(jax.random.key(2), (B, H, S, D), jnp.float32)
+        got = ops.prefill_attention(q, k, v, causal=True, block_q=128, block_k=128)
+        np.testing.assert_allclose(np.asarray(got[:, :, 0]), np.asarray(v[:, :, 0]),
+                                   rtol=1e-5, atol=1e-5)

@@ -1,0 +1,119 @@
+"""End-to-end Poisson sampling over joins (Index-and-Probe vs M&S)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (
+    Atom, Database, JoinQuery, PoissonSampler, estimate, yannakakis,
+)
+
+
+@pytest.fixture(scope="module")
+def contact_db():
+    """A miniature of the paper's Q_c: Person self-join x ContactProb."""
+    rng = np.random.default_rng(7)
+    nper, npool, nage = 120, 8, 3
+    grid = [(g, a1, a2) for g in range(npool) for a1 in range(nage) for a2 in range(nage)]
+    return Database.from_columns({
+        "Person": {"pers": np.arange(nper), "age": rng.integers(0, nage, nper),
+                   "pool": rng.integers(0, npool, nper)},
+        "ContactProb": {"pool": [g for g, _, _ in grid],
+                        "age1": [a for _, a, _ in grid],
+                        "age2": [a for _, _, a in grid],
+                        "prob": rng.random(len(grid)) * 0.25},
+    })
+
+
+@pytest.fixture(scope="module")
+def contact_query():
+    return JoinQuery((
+        Atom.of("Person", "per1", "age1", "pool", alias="P1"),
+        Atom.of("Person", "per2", "age2", "pool", alias="P2"),
+        Atom.of("ContactProb", "pool", "age1", "age2", "prob"),
+    ), prob_var="prob")
+
+
+class TestPoissonSampler:
+    def test_sample_membership(self, contact_db, contact_query):
+        s = PoissonSampler(contact_db, contact_query, rep="both")
+        smp = s.sample_auto(jax.random.key(0))
+        v = np.asarray(smp.valid())
+        full = yannakakis.full_join(contact_db, contact_query)
+        keys = ("per1", "per2", "pool", "age1", "age2")
+        fullset = set(zip(*[np.asarray(full[k]) for k in keys]))
+        got = list(zip(*[np.asarray(smp.columns[k])[v] for k in keys]))
+        assert len(got) == int(smp.count)
+        assert all(t in fullset for t in got)
+
+    def test_sample_count_statistics(self, contact_db, contact_query):
+        s = PoissonSampler(contact_db, contact_query)
+        cnts = [int(s.sample(jax.random.key(i)).count) for i in range(60)]
+        exp = s.expected_k()
+        sd = float(estimate.sample_std(s.w, s.p))
+        z = (np.mean(cnts) - exp) / (sd / 60 ** 0.5)
+        assert abs(z) < 4.5
+
+    def test_csr_usr_same_sample(self, contact_db, contact_query):
+        s = PoissonSampler(contact_db, contact_query, rep="both")
+        a = s.sample(jax.random.key(3), rep="usr")
+        b = s.sample(jax.random.key(3), rep="csr")
+        for k in a.columns:
+            assert np.array_equal(np.asarray(a.columns[k]), np.asarray(b.columns[k])), k
+
+    def test_prob_var_at_root(self, contact_db, contact_query):
+        s = PoissonSampler(contact_db, contact_query)
+        assert contact_query.prob_var in s.shred.root.variables
+
+    def test_uniform_sampling_methods(self, contact_db, contact_query):
+        s = PoissonSampler(contact_db, contact_query)
+        n = s.join_size
+        for method in ("bern", "geo", "hybrid", "binom"):
+            smp = s.uniform_sample(jax.random.key(1), 0.05, method=method)
+            c = int(smp.count)
+            sd = (n * 0.05 * 0.95) ** 0.5
+            assert abs(c - n * 0.05) < 6 * sd, (method, c, n * 0.05)
+
+    def test_sample_determinism(self, contact_db, contact_query):
+        s = PoissonSampler(contact_db, contact_query)
+        a = s.sample(jax.random.key(11))
+        b = s.sample(jax.random.key(11))
+        assert np.array_equal(np.asarray(a.positions), np.asarray(b.positions))
+
+    def test_ptbern_flat_matches_exprace_stats(self, contact_db, contact_query):
+        s1 = PoissonSampler(contact_db, contact_query, method="exprace")
+        s2 = PoissonSampler(contact_db, contact_query, method="ptbern_flat")
+        c1 = [int(s1.sample(jax.random.key(i)).count) for i in range(40)]
+        c2 = [int(s2.sample(jax.random.key(i)).count) for i in range(40)]
+        se = (np.var(c1) / 40 + np.var(c2) / 40) ** 0.5
+        assert abs(np.mean(c1) - np.mean(c2)) < 4.5 * max(se, 1e-9)
+
+
+class TestMaterializeAndScan:
+    def test_ms_expectation(self, contact_db, contact_query):
+        kept = []
+        for i in range(25):
+            _, keep = yannakakis.materialize_and_scan(
+                jax.random.key(i), contact_db, contact_query)
+            kept.append(int(np.asarray(keep).sum()))
+        s = PoissonSampler(contact_db, contact_query)
+        exp = s.expected_k()
+        sd = float(estimate.sample_std(s.w, s.p))
+        z = (np.mean(kept) - exp) / (sd / 25 ** 0.5)
+        assert abs(z) < 4.5
+
+    def test_ms_uniform(self, contact_db, contact_query):
+        cols, keep = yannakakis.materialize_and_scan(
+            jax.random.key(0), contact_db, contact_query, uniform_p=0.1)
+        n = keep.shape[0]
+        assert abs(int(keep.sum()) - 0.1 * n) < 6 * (n * 0.09) ** 0.5
+
+
+def test_empty_join_sampling():
+    db = Database.from_columns({"R": {"x": [1, 2], "p": [0.5, 0.5]},
+                                "S": {"x": [7, 9]}})
+    q = JoinQuery((Atom.of("R", "x", "p"), Atom.of("S", "x")), prob_var="p")
+    s = PoissonSampler(db, q)
+    assert s.join_size == 0
+    smp = s.sample(jax.random.key(0))
+    assert int(smp.count) == 0

@@ -1,0 +1,177 @@
+"""Substrate tests: checkpointing (incl. fault injection), data pipeline
+determinism, optimizer, gradient compression, schedules, hlo cost parser."""
+import json
+import os
+from pathlib import Path
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.data import PoissonJoinSource, SyntheticLMSource, make_corpus_db
+from repro.optim import AdamWConfig, adamw_init, adamw_update, warmup_cosine
+from repro.parallel import compress_int8, decompress_int8
+
+
+class TestCheckpoint:
+    def _tree(self, x=1.0):
+        return {"a": jnp.full((4, 3), x), "b": {"c": jnp.arange(5), "d": jnp.float32(x)}}
+
+    def test_save_restore_roundtrip(self, tmp_path):
+        cm = CheckpointManager(tmp_path, async_save=False)
+        t = self._tree(2.5)
+        cm.save(7, t)
+        step, got = cm.restore(self._tree(0.0))
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_keep_n_gc(self, tmp_path):
+        cm = CheckpointManager(tmp_path, keep_n=2, async_save=False)
+        for s in (1, 2, 3, 4):
+            cm.save(s, self._tree(s))
+        assert cm.all_steps() == [3, 4]
+
+    def test_corruption_falls_back(self, tmp_path):
+        cm = CheckpointManager(tmp_path, async_save=False)
+        cm.save(1, self._tree(1.0))
+        cm.save(2, self._tree(2.0))
+        # corrupt the newest shard (torn write / bad disk)
+        shard = tmp_path / "step_0000000002" / "shard0.npz"
+        shard.write_bytes(shard.read_bytes()[:-20] + b"garbage_garbage_g_20")
+        step, got = cm.restore(self._tree(0.0))
+        assert step == 1, "must fall back to the previous valid checkpoint"
+        assert float(got["b"]["d"]) == 1.0
+
+    def test_partial_save_invisible(self, tmp_path):
+        """A tmp dir left by a crash mid-save is never restored."""
+        cm = CheckpointManager(tmp_path, async_save=False)
+        cm.save(5, self._tree(5.0))
+        (tmp_path / "tmp.9.0").mkdir()
+        (tmp_path / "tmp.9.0" / "shard0.npz").write_bytes(b"junk")
+        step, _ = cm.restore(self._tree(0.0))
+        assert step == 5
+
+    def test_async_save(self, tmp_path):
+        cm = CheckpointManager(tmp_path, async_save=True)
+        cm.save(3, self._tree(3.0))
+        cm.wait()
+        assert cm.all_steps() == [3]
+
+
+class TestDataPipeline:
+    def test_deterministic_in_seed_step(self):
+        db = make_corpus_db(64, 8, 17, 100, seed=3)
+        a = PoissonJoinSource(db, 17, 4, seed=9).batch_at(5)
+        b = PoissonJoinSource(db, 17, 4, seed=9).batch_at(5)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+    def test_different_steps_differ(self):
+        db = make_corpus_db(64, 8, 17, 100, seed=3)
+        src = PoissonJoinSource(db, 17, 4, seed=9)
+        a, b = src.batch_at(1), src.batch_at(2)
+        assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+    def test_quality_weighting(self):
+        """Docs in higher-quality clusters must be sampled more often."""
+        db = make_corpus_db(400, 2, 9, 50, seed=0)
+        # force cluster 0 -> p=0.9, cluster 1 -> p=0.05
+        import jax.numpy as jnp_
+        db.relations["ClusterQuality"].columns["p"] = jnp_.asarray([0.9, 0.05])
+        src = PoissonJoinSource(db, 9, 16, seed=1)
+        clusters = np.asarray(db.relations["Doc"].column("clust"))
+        counts = np.zeros(2)
+        for step in range(30):
+            k = int(src.sampler.sample(jax.random.fold_in(src.key, step)).count)
+            s = src.sampler.sample(jax.random.fold_in(src.key, step))
+            docs = np.asarray(s.columns["doc"])[:k]
+            for c in clusters[docs]:
+                counts[c] += 1
+        n0 = (clusters == 0).sum()
+        n1 = (clusters == 1).sum()
+        rate0, rate1 = counts[0] / max(n0, 1), counts[1] / max(n1, 1)
+        assert rate0 > 5 * rate1, (rate0, rate1)
+
+    def test_synthetic_source_shapes(self):
+        src = SyntheticLMSource(100, 16, 4, seed=0)
+        b = src.batch_at(0)
+        assert b["tokens"].shape == (4, 16) and b["targets"].shape == (4, 16)
+
+
+class TestOptim:
+    def test_adamw_converges_quadratic(self):
+        cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+        params = {"w": jnp.asarray([4.0, -3.0])}
+        state = adamw_init(cfg, params)
+        for _ in range(200):
+            g = {"w": 2 * params["w"]}  # d/dw ||w||^2
+            params, state, _ = adamw_update(cfg, params, g, state)
+        assert float(jnp.abs(params["w"]).max()) < 1e-2
+
+    def test_factored_matches_dense_direction(self):
+        k = jax.random.key(0)
+        p = {"w": jax.random.normal(k, (8, 6))}
+        g = {"w": jax.random.normal(jax.random.fold_in(k, 1), (8, 6))}
+        dense = adamw_update(AdamWConfig(lr=0.01), p, g,
+                             adamw_init(AdamWConfig(), p))[0]["w"]
+        fact_cfg = AdamWConfig(lr=0.01, factored=True)
+        fact = adamw_update(fact_cfg, p, g, adamw_init(fact_cfg, p))[0]["w"]
+        # same sign of update on first step (rank-1 v approx is exact at t=1
+        # up to the row/col means); directions should broadly agree
+        agree = jnp.mean((jnp.sign(dense - p["w"]) == jnp.sign(fact - p["w"])))
+        assert float(agree) > 0.9
+
+    def test_clip_norm(self):
+        from repro.optim.adamw import clip_by_global_norm
+        g = {"w": jnp.full((10,), 100.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        total = jnp.sqrt(sum(jnp.sum(x ** 2) for x in jax.tree.leaves(clipped)))
+        assert abs(float(total) - 1.0) < 1e-5
+
+    def test_schedule(self):
+        assert float(warmup_cosine(0, warmup=10, total=100)) == 0.0
+        assert abs(float(warmup_cosine(10, warmup=10, total=100)) - 1.0) < 1e-6
+        assert float(warmup_cosine(100, warmup=10, total=100)) <= 0.11
+
+
+class TestCompression:
+    def test_roundtrip_error_bounded(self):
+        g = jax.random.normal(jax.random.key(0), (128,)) * 3
+        q, s = compress_int8(g)
+        err = jnp.abs(decompress_int8(q, s) - g)
+        assert float(err.max()) <= float(s) * 0.5 + 1e-6
+
+    def test_error_feedback_unbiased_accumulation(self):
+        """With EF, the accumulated applied update converges to the true sum."""
+        rng = np.random.default_rng(0)
+        true_sum = np.zeros(64)
+        applied = np.zeros(64)
+        err = jnp.zeros(64)
+        for i in range(200):
+            g = jnp.asarray(rng.normal(size=64) * 0.01)
+            true_sum += np.asarray(g)
+            corrected = g + err
+            q, s = compress_int8(corrected)
+            deq = decompress_int8(q, s)
+            applied += np.asarray(deq)
+            err = corrected - deq
+        # the residual is bounded by one quantization step, not growing
+        assert np.abs(true_sum - applied).max() < 0.01
+
+
+class TestHloCost:
+    def test_scan_multiplier(self):
+        from repro.launch.hlo_cost import HloCost
+
+        def f(x, w):
+            def body(h, _):
+                return jnp.tanh(h @ w), None
+            return jax.lax.scan(body, x, None, length=10)[0]
+
+        x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+        comp = jax.jit(f).lower(x, x).compile()
+        flops = HloCost(comp.as_text()).entry_cost()["flops"]
+        expected = 10 * 2 * 128 ** 3
+        assert 0.9 < flops / expected < 1.2
