@@ -1,0 +1,57 @@
+"""Engine compiled-plan cache: cold vs warm latency (DESIGN.md §7).
+
+Measures what the ``QueryEngine`` cache actually buys on the serving path:
+
+  cold  — first call on a query fingerprint: GYO + shred build + jit trace
+          + dispatch (everything a naive per-request executor pays);
+  warm  — same query again: dict lookup + cached-trace dispatch;
+  rebuild — the no-cache baseline: a fresh engine per request.
+
+Reported per workload for both entry points (poisson_sample / full_join).
+The cold/warm ratio is the multi-tenant serving argument: with Q query
+shapes and R >> Q requests, total work is Q colds + (R - Q) warms.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.engine import QueryEngine
+from .timing import row, time_fn
+from .workloads import job_like, stats_like
+
+
+def _once(fn) -> float:
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) * 1e6
+
+
+def run(out):
+    for name, (db, q) in (("job_like", job_like(scale=1200)),
+                          ("stats_like", stats_like(scale=1500))):
+        key = jax.random.key(0)
+
+        engine = QueryEngine(db)
+        us_cold = _once(lambda: engine.poisson_sample(q, key).positions)
+        us_warm = time_fn(lambda: engine.poisson_sample(q, key), reps=5)
+        us_rebuild = time_fn(
+            lambda: QueryEngine(db).poisson_sample(q, key), reps=3)
+        out(row(f"engine/{name}/sample-cold", us_cold))
+        out(row(f"engine/{name}/sample-warm", us_warm,
+                f"cold/warm={us_cold/us_warm:.1f}x"))
+        out(row(f"engine/{name}/sample-rebuild", us_rebuild,
+                f"rebuild/warm={us_rebuild/us_warm:.1f}x"))
+
+        engine2 = QueryEngine(db)
+        us_fj_cold = _once(lambda: next(iter(engine2.full_join(q).values())))
+        us_fj_warm = time_fn(lambda: engine2.full_join(q), reps=5)
+        out(row(f"engine/{name}/fulljoin-cold", us_fj_cold))
+        out(row(f"engine/{name}/fulljoin-warm", us_fj_warm,
+                f"cold/warm={us_fj_cold/us_fj_warm:.1f}x"))
+
+        st = engine.stats
+        out(row(f"engine/{name}/cache-stats", 0.0,
+                f"builds={st.shred_builds};hits={st.plan_hits};"
+                f"misses={st.plan_misses}"))

@@ -1,6 +1,8 @@
 """Paper Fig. 9 / Table 2: non-uniform Poisson sampling across low / medium /
 high probability distributions, I&P vs M-CSYA, plus the beyond-paper
-EXPRACE sampler vs the faithful PT*-style flat-Bernoulli.
+EXPRACE sampler vs the faithful PT*-style flat-Bernoulli — all routed
+through one ``QueryEngine`` per workload, so the three I&P variants share
+the engine's shred cache (usr built once, csr built once).
 
 Reproduced claims: I&P speedups grow as the probability distribution gets
 lighter (low > medium > high), mirroring the paper's (min/avg/max) speedup
@@ -11,7 +13,7 @@ from __future__ import annotations
 
 import jax
 
-from repro.core import PoissonSampler, yannakakis
+from repro.engine import QueryEngine
 from .timing import row, time_fn
 from .workloads import PROB_DISTS, job_like, stats_like
 
@@ -19,20 +21,21 @@ from .workloads import PROB_DISTS, job_like, stats_like
 def _suite(name, mk, out):
     for dist in ("low", "medium", "high"):
         db, q = mk(dist=dist)
-        s_race = PoissonSampler(db, q, rep="usr", method="exprace")
-        s_bern = PoissonSampler(db, q, rep="usr", method="ptbern_flat")
-        s_csr = PoissonSampler(db, q, rep="csr", method="exprace")
-        n = s_race.join_size
-        ek = s_race.expected_k()
+        engine = QueryEngine(db, rep="usr")
+        plan_race = engine.compile(q, rep="usr", method="exprace")
+        plan_bern = engine.compile(q, rep="usr", method="ptbern_flat")
+        plan_csr = engine.compile(q, rep="csr", method="exprace")
+        n = plan_race.join_size
+        ek = plan_race.expected_k()
 
-        us_r = time_fn(lambda k: s_race.sample(k), jax.random.key(0), reps=3)
+        us_r = time_fn(lambda k: plan_race.sample(k), jax.random.key(0), reps=3)
         out(row(f"fig9/{name}/{dist}/I&P-usr-EXPRACE", us_r,
                 f"|Q|={n};E[k]={ek:.0f}"))
-        us_c = time_fn(lambda k: s_csr.sample(k), jax.random.key(0), reps=3)
+        us_c = time_fn(lambda k: plan_csr.sample(k), jax.random.key(0), reps=3)
         out(row(f"fig9/{name}/{dist}/I&P-csr-EXPRACE", us_c))
-        us_b = time_fn(lambda k: s_bern.sample(k), jax.random.key(0), reps=3)
+        us_b = time_fn(lambda k: plan_bern.sample(k), jax.random.key(0), reps=3)
         out(row(f"fig9/{name}/{dist}/I&P-usr-PTBERNflat", us_b))
-        us_ms = time_fn(lambda k: yannakakis.materialize_and_scan(k, db, q),
+        us_ms = time_fn(lambda k: engine.materialize_and_scan(k, q),
                         jax.random.key(0), reps=3)
         out(row(f"fig9/{name}/{dist}/M-CSYA", us_ms,
                 f"speedup={us_ms/us_r:.2f}x"))

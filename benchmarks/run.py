@@ -18,7 +18,7 @@ def main() -> None:
 
     from . import (bench_position_sampling, bench_uniform_e2e, bench_poisson,
                    bench_build_probe, bench_full_join, bench_qc,
-                   bench_caching, bench_kernels, roofline)
+                   bench_caching, bench_engine_cache, bench_kernels, roofline)
     suites = [
         ("fig7_position_sampling", bench_position_sampling.run),
         ("fig8_uniform_e2e", bench_uniform_e2e.run),
@@ -27,6 +27,7 @@ def main() -> None:
         ("table4_full_join", bench_full_join.run),
         ("fig10_qc", bench_qc.run),
         ("table6_caching", bench_caching.run),
+        ("engine_cache", bench_engine_cache.run),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]

@@ -1,11 +1,12 @@
-"""Quickstart: Poisson sampling over an acyclic join in ~40 lines.
+"""Quickstart: one engine, one index — full joins AND Poisson samples.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import numpy as np
 
-from repro.core import Atom, Database, JoinQuery, PoissonSampler, yannakakis
+from repro.core import Atom, Database, JoinQuery
+from repro.engine import QueryEngine
 
 # A tiny movie database: every (title, actor, company) combination of a title
 # is a join tuple; each title carries its own sampling probability p.
@@ -20,18 +21,20 @@ query = JoinQuery(
     prob_var="p",
 )
 
-# Index once (O(|db|)) ...
-sampler = PoissonSampler(db, query)
-print(f"full join size |Q(db)| = {sampler.join_size} "
-      f"(never materialized), expected sample size = {sampler.expected_k():.1f}")
+# One engine binds the database; the first call on a query plans (GYO),
+# builds the shred index, and jit-compiles the executors — everything after
+# that is served from the compiled-plan cache.
+engine = QueryEngine(db)
+print(f"full join size |Q(db)| = {engine.join_size(query)} (never materialized)")
 
-# ... then draw independent Poisson samples per step (O(k log |db|) each).
+# Independent Poisson samples per step (O(k log |db|) each, warm-cache).
 for step in range(3):
-    s = sampler.sample(jax.random.key(step))
+    s = engine.poisson_sample(query, jax.random.key(step))
     k = int(s.count)
     rows = list(zip(*(np.asarray(s.columns[c])[:k] for c in ("t", "actor", "comp", "p"))))
     print(f"step {step}: k={k} sample={rows}")
 
-# The same index computes the full join (Yannakakis "without regret"):
-full = yannakakis.flatten(sampler.shred)
+# The same cached index computes the full join (Yannakakis "without regret"):
+full = engine.full_join(query)
 print("full join tuples:", len(next(iter(full.values()))))
+print(engine.explain(query))

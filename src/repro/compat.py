@@ -1,0 +1,33 @@
+"""Version compatibility shims for the pinned container toolchain.
+
+The repo targets current jax APIs but must also run on the container's
+older release (no ``jax.shard_map``, no ``jax.sharding.AxisType``) — the
+rule is gate, don't vendor: each shim forwards to the modern API when
+present and falls back to the documented equivalent otherwise.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "axis_size"]
+
+
+def axis_size(name):
+    """``jax.lax.axis_size`` when available, else the psum(1) identity."""
+    import jax.lax
+
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(name)
+    return jax.lax.psum(1, name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` when available, else the experimental spelling
+    (whose ``check_rep`` is the old name of ``check_vma``)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)

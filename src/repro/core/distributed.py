@@ -34,9 +34,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from . import estimate, probe, sampling
 from .database import Database
 from .jointree import Atom, JoinQuery
-from .poisson import JoinSample, _sample_jit
+from .poisson import JoinSample
 from .relations import Relation
 from .shred import Shred, build_shred
+from repro.compat import axis_size, shard_map
 
 __all__ = ["ShardedPoissonSampler", "partition_root"]
 
@@ -122,7 +123,7 @@ class ShardedPoissonSampler:
 
         spec = P(axes)  # shard the leading (stacked) dim over the data axes
         self._sharded = jax.jit(
-            jax.shard_map(
+            shard_map(
                 partial(self._local_sample, cap=self.cap, acap=self.acap,
                         rep=self.rep, method=self.method, axes=self.axes),
                 mesh=mesh,
@@ -137,10 +138,13 @@ class ShardedPoissonSampler:
         # Fold the shard coordinate into the key: independent trials per shard.
         idx = jnp.zeros((), jnp.int32)
         for a in axes:
-            idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+            idx = idx * axis_size(a) + jax.lax.axis_index(a)
         key = jax.random.fold_in(key, idx)
         # Drop the leading (stacked) singleton shard dim.
         shred, w, p, prefE = jax.tree.map(lambda x: x[0], (shred, w, p, prefE))
+        # Lazy: the executor lives in repro.engine (which imports repro.core).
+        from repro.engine.executors import _sample_jit
+
         s = _sample_jit(shred, w, p, prefE, key, cap=cap, rep=rep,
                         method=method, acap=acap)
         total = jax.lax.psum(s.count, axes)

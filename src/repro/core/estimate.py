@@ -38,7 +38,8 @@ def round_up(x: int, multiple: int = 128) -> int:
     return int(-(-x // multiple)) * multiple
 
 
-def plan_capacity(mean: float, std: float, sigmas: float = 6.0, slack: int = 64) -> int:
+def plan_capacity(mean: float, std: float, sigmas: float = 6.0, slack: int = 64,
+                  multiple: int = 128) -> int:
     """Static capacity for a sampler invocation (multiple of 128 for TPU lanes)."""
     cap = int(math.ceil(float(mean) + sigmas * float(std))) + slack
-    return round_up(max(cap, 128))
+    return round_up(max(cap, multiple), multiple)

@@ -6,20 +6,24 @@
 The index is built once; each .sample() draws a *fresh independent* Poisson
 sample — the Monte-Carlo-loop usage pattern of the paper's EpiQL engine and
 of this repo's training-data pipeline (data/pipeline.py).
+
+Since the engine refactor (DESIGN.md §7), ``PoissonSampler`` is a thin
+facade over ``repro.engine.QueryEngine``: it compiles one plan on a private
+engine and delegates every call, so its results are bit-identical to
+``engine.poisson_sample`` under the same key. New code that issues more
+than one query should construct a ``QueryEngine`` directly to share the
+compiled-plan and shred caches across queries.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from . import estimate, probe, sampling
 from .database import Database
 from .jointree import JoinQuery
-from .shred import Shred, build_shred
 
 __all__ = ["JoinSample", "PoissonSampler"]
 
@@ -57,25 +61,12 @@ class JoinSample:
         return jnp.arange(self.capacity) < self.count
 
 
-def _sample_jit(
-    shred: Shred, w, p, prefE, key, cap: int, rep: str, method: str, n: int = 0,
-    acap: int = 0, project=None,
-) -> JoinSample:
-    if method == "exprace":
-        ps = sampling.exprace_positions(key, w, p, prefE, cap, arrival_cap=acap)
-    elif method == "ptbern_flat":  # n is the static, concrete join size
-        ps = sampling.pt_bern_flat_positions(key, p, prefE, n, cap)
-    else:
-        raise ValueError(f"unknown jit sampling method {method!r}")
-    pos = jnp.minimum(ps.positions, jnp.maximum(prefE[-1] - 1, 0))  # clamp pads
-    cols = probe.get(shred, pos, rep=rep)
-    if project is not None:
-        cols = {v: c for v, c in cols.items() if v in project}
-    return JoinSample(cols, ps.positions, ps.count, ps.overflow)
-
-
 class PoissonSampler:
-    """Index-and-Probe executor for ``Q = beta_y(R1 |><| ... |><| Rl)``."""
+    """Index-and-Probe executor for ``Q = beta_y(R1 |><| ... |><| Rl)``.
+
+    Facade over ``repro.engine.QueryEngine`` (one engine, one compiled
+    plan); kept for API stability and the single-query use case.
+    """
 
     def __init__(
         self,
@@ -92,87 +83,51 @@ class PoissonSampler:
         columns (y must be in A). Set-based (duplicate-eliminating) free-
         connex projection would need Carmeli et al.'s Q'/D' reduction —
         documented as out of scope in DESIGN.md §8."""
+        # Imported lazily: repro.engine imports repro.core, and this module
+        # is part of repro.core's own import sequence.
+        from repro.engine import QueryEngine
+
         if query.prob_var is None:
             raise ValueError("Poisson sampling needs query.prob_var (beta_y)")
         if project is not None and query.prob_var not in project:
             raise ValueError("prob_var (y) must be in the projection A")
-        self.project = tuple(project) if project else None
+        self.engine = QueryEngine(db, rep=rep)
+        self._plan = self.engine.compile(
+            query, rep=rep, method=method, project=project)
+        self.project = self._plan.project
         self.query = query
-        self.rep_default = "usr" if rep == "both" else rep
+        self.rep_default = self._plan.rep_default
         self.method = method
-        self.shred = build_shred(db, query, rep=rep)
-        root = self.shred.root
-        if query.prob_var not in root.variables:
-            raise AssertionError("build_plan must reroot prob_var to the root")
-        self.w = root.weight
-        self.p = root.data.column(query.prob_var)
-        self.prefE = self.shred.root_prefE
-        self._jit = jax.jit(
-            partial(_sample_jit, method=method, project=self.project),
-            static_argnames=("cap", "rep", "n", "acap"),
-        )
+        self.shred = self._plan.shred
+        self.w = self._plan.w
+        self.p = self._plan.p
+        self.prefE = self._plan.prefE
 
     # -- capacity planning ---------------------------------------------------
     @property
     def join_size(self) -> int:
-        return int(self.shred.join_size)
+        return self._plan.join_size
 
     def expected_k(self) -> float:
-        return float(estimate.expected_sample_size(self.w, self.p))
+        return self._plan.expected_k()
 
     def default_capacity(self) -> int:
-        mean = estimate.expected_sample_size(self.w, self.p)
-        std = estimate.sample_std(self.w, self.p)
-        return estimate.plan_capacity(float(mean), float(std))
+        return self._plan.default_capacity()
 
     def arrival_capacity(self) -> int:
-        mass = float(estimate.exprace_arrival_mass(self.w, self.p))
-        return estimate.plan_capacity(mass, mass**0.5)
+        return self._plan.arrival_capacity()
 
     # -- sampling -------------------------------------------------------------
-    def _empty(self, cap: int) -> JoinSample:
-        cols = {v: jnp.zeros((cap,), node.data.column(v).dtype)
-                for node in self.shred.root.nodes() for v in node.owned}
-        return JoinSample(cols, jnp.zeros((cap,), jnp.int64),
-                          jnp.zeros((), jnp.int64), jnp.zeros((), jnp.bool_))
-
     def sample(self, key, cap: Optional[int] = None, rep: Optional[str] = None,
                acap: Optional[int] = None) -> JoinSample:
-        cap = cap or self.default_capacity()
-        if self.join_size == 0:
-            return self._empty(cap)
-        acap = acap or (self.arrival_capacity() if self.method == "exprace" else 0)
-        n = self.join_size if self.method == "ptbern_flat" else 0
-        return self._jit(self.shred, self.w, self.p, self.prefE, key, cap=cap,
-                         rep=rep or self.rep_default, n=n, acap=acap)
+        return self._plan.sample(key, cap=cap, rep=rep, acap=acap)
 
     def sample_auto(self, key, max_doublings: int = 8) -> JoinSample:
         """Redraw with doubled capacity until no overflow (host loop)."""
-        cap = self.default_capacity()
-        acap = self.arrival_capacity() if self.method == "exprace" else 0
-        for _ in range(max_doublings):
-            s = self.sample(key, cap=cap, acap=acap)
-            if not bool(s.overflow):
-                return s
-            cap *= 2
-            acap *= 2
-        raise RuntimeError("sample capacity still overflowing after doublings")
+        return self._plan.sample_auto(key, max_doublings=max_doublings)
 
     def uniform_sample(
         self, key, p: float, cap: Optional[int] = None, method: str = "hybrid"
     ) -> JoinSample:
         """beta_p with a fixed uniform probability (paper §6.1)."""
-        n = self.join_size
-        if cap is None:
-            mean = n * p
-            cap = estimate.plan_capacity(mean, (mean * max(1 - p, 0.0)) ** 0.5)
-        fn = {
-            "bern": sampling.bern_positions,
-            "geo": sampling.geo_positions,
-            "binom": sampling.binom_positions,
-            "hybrid": sampling.hybrid_positions,
-        }[method]
-        ps = fn(key, p, n, cap)
-        pos = jnp.minimum(ps.positions, max(n - 1, 0))
-        cols = probe.get(self.shred, pos, rep=self.rep_default)
-        return JoinSample(cols, ps.positions, ps.count, ps.overflow)
+        return self._plan.uniform_sample(key, p, cap=cap, method=method)

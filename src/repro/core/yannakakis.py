@@ -41,9 +41,14 @@ def flatten(shred: Shred, rep: Optional[str] = None) -> Dict[str, jnp.ndarray]:
 
 
 def full_join(db: Database, query: JoinQuery, rep: str = "usr") -> Dict[str, jnp.ndarray]:
-    """Yannakakis via shredded semijoins + flatten (SYA; Prop 4.4/4.5)."""
-    shred = build_shred(db, query, rep=rep)
-    return flatten(shred, rep="usr" if rep == "both" else rep)
+    """Yannakakis via shredded semijoins + flatten (SYA; Prop 4.4/4.5).
+
+    Facade over ``repro.engine.QueryEngine.full_join`` (one throwaway
+    engine). Callers issuing repeated queries should hold a ``QueryEngine``
+    so the shred index is cached across calls (DESIGN.md §7)."""
+    from repro.engine import QueryEngine  # lazy: engine imports repro.core
+
+    return QueryEngine(db, rep=rep).full_join(query)
 
 
 def materialize_and_scan(

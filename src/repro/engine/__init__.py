@@ -1,0 +1,32 @@
+"""repro.engine — the unified acyclic-join query engine (DESIGN.md §7).
+
+One ``QueryEngine`` instance binds a ``Database`` and serves every workload
+the paper derives from the shredded random-access index, from one build:
+
+    engine = QueryEngine(db)
+    full   = engine.full_join(query)              # Yannakakis (SYA)
+    smp    = engine.poisson_sample(query, key)    # EXPRACE Poisson sample
+    uni    = engine.uniform_sample(query, key, p) # uniform beta_p
+    n      = engine.join_size(query)              # |Q(db)|, O(1)
+    print(engine.explain(query))
+
+Public API:
+    QueryEngine       plan/cache/dispatch over one database
+    CompiledPlan      a cached plan: shred index + jitted executors
+    CapacityPolicy    explicit static-shape capacity & overflow policy
+    CacheStats        observable shred/plan cache counters
+    fingerprint.*     structure-only cache keys
+
+The legacy entry points (``core.PoissonSampler``, ``core.yannakakis
+.full_join``) are thin facades over this engine; new code should construct
+a ``QueryEngine`` directly so repeated queries share its caches.
+"""
+from .capacity import CapacityPolicy, DEFAULT_POLICY
+from .engine import CacheStats, QueryEngine
+from .fingerprint import query_fingerprint, schema_fingerprint
+from .plan import CompiledPlan
+
+__all__ = [
+    "QueryEngine", "CompiledPlan", "CapacityPolicy", "DEFAULT_POLICY",
+    "CacheStats", "query_fingerprint", "schema_fingerprint",
+]

@@ -1,0 +1,192 @@
+"""The unified query engine: plan once, index once, serve everything.
+
+``QueryEngine`` is the paper's closing claim turned into an API surface
+(DESIGN.md §7): one random-access shred index is a *uniform basis* for both
+classical acyclic join processing (Yannakakis / SYA) and Poisson sampling
+"without regret". The engine owns
+
+  * a bound, immutable ``Database``;
+  * a shred cache  — (query fingerprint, rep) -> built index;
+  * a plan cache   — (query fingerprint, rep, method, project) -> jitted
+    executors (``CompiledPlan``);
+  * an explicit ``CapacityPolicy`` for static-shape buffer planning.
+
+Repeated and batched queries with the same fingerprint skip GYO, index
+construction, and XLA retracing entirely — the warm path is a dict lookup
+plus one cached-trace dispatch. Both caches are LRU-bounded.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core.database import Database
+from repro.core.jointree import JoinQuery
+from repro.core.poisson import JoinSample
+from repro.core.shred import Shred, build_plan, build_shred
+from repro.core import yannakakis
+
+from .capacity import CapacityPolicy, DEFAULT_POLICY
+from .fingerprint import executor_key, plan_key
+from .plan import CompiledPlan
+
+__all__ = ["QueryEngine", "CacheStats"]
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Observable cache behavior (asserted in tests, reported by serve)."""
+
+    shred_builds: int = 0
+    shred_hits: int = 0
+    plan_hits: int = 0
+    plan_misses: int = 0
+
+    def snapshot(self) -> "CacheStats":
+        return dataclasses.replace(self)
+
+
+class QueryEngine:
+    """Plans, caches, and dispatches acyclic-join queries over one database.
+
+    Usage::
+
+        engine = QueryEngine(db)
+        full   = engine.full_join(query)             # Yannakakis via index
+        smp    = engine.poisson_sample(query, key)   # EXPRACE via same index
+
+    Both entry points share the shred cache: the first call on a query
+    fingerprint builds the index, every later call (either entry point,
+    any number of sample draws) reuses it.
+    """
+
+    def __init__(self, db: Database, *, rep: str = "usr",
+                 policy: Optional[CapacityPolicy] = None,
+                 max_plans: int = 64):
+        if rep not in ("csr", "usr", "both"):
+            raise ValueError(f"rep must be csr|usr|both, got {rep!r}")
+        self.db = db
+        self.rep = rep
+        self.policy = policy or DEFAULT_POLICY
+        self.max_plans = max_plans
+        self.stats = CacheStats()
+        self._shreds: "collections.OrderedDict[Tuple, Shred]" = collections.OrderedDict()
+        self._plans: "collections.OrderedDict[Tuple, CompiledPlan]" = collections.OrderedDict()
+
+    # -- cache plumbing ------------------------------------------------------
+    def _shred_for(self, query: JoinQuery, rep: str) -> Shred:
+        key = plan_key(query, rep)
+        hit = self._shreds.get(key)
+        if hit is not None:
+            self._shreds.move_to_end(key)
+            self.stats.shred_hits += 1
+            return hit
+        self.stats.shred_builds += 1
+        shred = build_shred(self.db, query, rep=rep)
+        self._shreds[key] = shred
+        while len(self._shreds) > self.max_plans:
+            self._shreds.popitem(last=False)
+        return shred
+
+    def compile(self, query: JoinQuery, *, rep: Optional[str] = None,
+                method: str = "exprace",
+                project: Optional[tuple] = None) -> CompiledPlan:
+        """Plan + index + jit for a query; cached by fingerprint.
+
+        ``project``: bag-based projection attributes A for queries of the
+        paper's form beta_y(pi_A(Q^)) (eq. 2). Sampling first and projecting
+        the sample is exact for bag projection; set-based free-connex
+        projection is out of scope (DESIGN.md §8).
+        """
+        rep = rep or self.rep
+        project = tuple(project) if project else None
+        if project is not None and query.prob_var is not None \
+                and query.prob_var not in project:
+            raise ValueError("prob_var (y) must be in the projection A")
+        key = executor_key(query, rep, method, project)
+        hit = self._plans.get(key)
+        if hit is not None:
+            self._plans.move_to_end(key)
+            self.stats.plan_hits += 1
+            return hit
+        self.stats.plan_misses += 1
+        plan = CompiledPlan(
+            query=query, rep=rep,
+            rep_default="usr" if rep == "both" else rep,
+            method=method, project=project,
+            shred=self._shred_for(query, rep), policy=self.policy,
+        )
+        self._plans[key] = plan
+        while len(self._plans) > self.max_plans:
+            self._plans.popitem(last=False)
+        return plan
+
+    def rebind(self, db: Database) -> "QueryEngine":
+        """Bind a new database instance, dropping both caches. Always
+        invalidates — even an identical schema fingerprint can carry
+        different data values, and shreds depend on values (cheap
+        correctness over cleverness; see DESIGN.md §7)."""
+        self.db = db
+        self._shreds.clear()
+        self._plans.clear()
+        return self
+
+    # -- entry points --------------------------------------------------------
+    def full_join(self, query: JoinQuery, *,
+                  rep: Optional[str] = None) -> Dict[str, jnp.ndarray]:
+        """Yannakakis full join via the cached index (SYA; Prop 4.4/4.5)."""
+        return self.compile(query, rep=rep).full_join(rep=rep)
+
+    def poisson_sample(self, query: JoinQuery, key, *,
+                       cap: Optional[int] = None, acap: Optional[int] = None,
+                       rep: Optional[str] = None, method: str = "exprace",
+                       project: Optional[tuple] = None,
+                       auto: bool = False) -> JoinSample:
+        """One independent Poisson sample of ``beta_y(Q)`` via the cached
+        index. ``auto=True`` applies the policy's redraw-on-overflow loop."""
+        if query.prob_var is None:
+            raise ValueError("Poisson sampling needs query.prob_var (beta_y)")
+        plan = self.compile(query, rep=rep, method=method, project=project)
+        if auto:
+            return plan.sample_auto(key, cap=cap, acap=acap)
+        return plan.sample(key, cap=cap, acap=acap,
+                           rep=rep if rep != "both" else None)
+
+    def uniform_sample(self, query: JoinQuery, key, p: float, *,
+                       cap: Optional[int] = None, method: str = "hybrid",
+                       rep: Optional[str] = None) -> JoinSample:
+        """beta_p with one fixed probability for every join tuple (§6.1)."""
+        plan = self.compile(query, rep=rep)
+        return plan.uniform_sample(key, p, cap=cap, method=method)
+
+    def join_size(self, query: JoinQuery) -> int:
+        """|Q(db)| in O(1) from the cached index (never materialized)."""
+        return self.compile(query).join_size
+
+    def explain(self, query: JoinQuery, *, rep: Optional[str] = None) -> str:
+        """Human-readable plan: the (rerooted) join tree + cache state."""
+        plan = self.compile(query, rep=rep)
+        tree = build_plan(query)  # the rerooted tree the plan executes
+        lines = [
+            f"QueryEngine plan  rep={plan.rep}  method={plan.method}",
+            "  join tree (GYO):",
+        ]
+        lines += ["    " + l for l in tree.pretty().rstrip().split("\n")]
+        lines += [
+            f"  |Q(db)| = {plan.join_size}",
+            f"  cached shreds={len(self._shreds)} plans={len(self._plans)} "
+            f"(hits: shred={self.stats.shred_hits} plan={self.stats.plan_hits})",
+        ]
+        return "\n".join(lines)
+
+    # -- baselines (kept for benchmarks; not cached) -------------------------
+    def materialize_and_scan(self, key, query: JoinQuery,
+                             uniform_p: Optional[float] = None):
+        """The M&S baseline: end-to-end materialize-then-Bernoulli, which
+        deliberately bypasses the engine caches — it rebuilds its index per
+        call, exactly the naive cost the I&P plans are measured against."""
+        return yannakakis.materialize_and_scan(
+            key, self.db, query, uniform_p=uniform_p, rep=self.rep)

@@ -1,0 +1,70 @@
+"""Jitted executors behind the engine's entry points (DESIGN.md §7).
+
+One executor = one trace unit. The Poisson-sample executor is the former
+``core/poisson.py`` ``_sample_jit`` moved here unchanged, so samples drawn
+through the engine are bit-identical to the pre-engine ``PoissonSampler``
+under the same PRNG key. ``jax.jit`` caches traces per static
+``(cap, rep, n, acap)`` tuple; the engine's plan cache keeps the jitted
+callable (and thus its trace cache) alive across queries with the same
+fingerprint, which is what makes warm calls retrace-free.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import probe, sampling
+from repro.core.poisson import JoinSample
+from repro.core.shred import Shred
+
+__all__ = ["sample_executor", "empty_sample", "uniform_positions_fn"]
+
+
+def _sample_jit(
+    shred: Shred, w, p, prefE, key, cap: int, rep: str, method: str, n: int = 0,
+    acap: int = 0, project=None,
+) -> JoinSample:
+    if method == "exprace":
+        ps = sampling.exprace_positions(key, w, p, prefE, cap, arrival_cap=acap)
+    elif method == "ptbern_flat":  # n is the static, concrete join size
+        ps = sampling.pt_bern_flat_positions(key, p, prefE, n, cap)
+    else:
+        raise ValueError(f"unknown jit sampling method {method!r}")
+    pos = jnp.minimum(ps.positions, jnp.maximum(prefE[-1] - 1, 0))  # clamp pads
+    cols = probe.get(shred, pos, rep=rep)
+    if project is not None:
+        cols = {v: c for v, c in cols.items() if v in project}
+    return JoinSample(cols, ps.positions, ps.count, ps.overflow)
+
+
+def sample_executor(method: str, project: Optional[tuple]):
+    """The jitted Poisson-sample executor with (method, project) baked in.
+
+    ``cap``/``rep``/``n``/``acap`` are static: each distinct combination is
+    one cached trace on the returned callable.
+    """
+    return jax.jit(
+        partial(_sample_jit, method=method, project=project),
+        static_argnames=("cap", "rep", "n", "acap"),
+    )
+
+
+def empty_sample(shred: Shred, cap: int) -> JoinSample:
+    """An all-padding sample (used when |Q(db)| == 0: nothing to probe)."""
+    cols = {v: jnp.zeros((cap,), node.data.column(v).dtype)
+            for node in shred.root.nodes() for v in node.owned}
+    return JoinSample(cols, jnp.zeros((cap,), jnp.int64),
+                      jnp.zeros((), jnp.int64), jnp.zeros((), jnp.bool_))
+
+
+def uniform_positions_fn(method: str):
+    """Position sampler for uniform beta_p (paper §6.1 BERN/GEO/BINOM/HYBRID)."""
+    return {
+        "bern": sampling.bern_positions,
+        "geo": sampling.geo_positions,
+        "binom": sampling.binom_positions,
+        "hybrid": sampling.hybrid_positions,
+    }[method]

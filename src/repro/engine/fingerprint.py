@@ -1,0 +1,66 @@
+"""Stable fingerprints for queries and database schemas (DESIGN.md §7).
+
+The compiled-plan cache is keyed by *structure*, never by data values:
+
+  * a query fingerprint covers the atoms (relation, alias, variables),
+    ``prob_var``, and nothing else — two queries with the same shape share
+    a join tree and therefore a plan;
+  * a schema fingerprint covers relation names, column names, dtypes, and
+    row counts — everything that determines traced array shapes/dtypes and
+    hence whether a cached shred + jitted executor is reusable.
+
+A ``QueryEngine`` owns one (immutable) ``Database``, so data identity is
+implied by engine identity and ``rebind()`` always drops both caches; the
+schema fingerprint is exposed for callers keying *across* engines (e.g.
+external plan registries, diagnostics). Mutating relation *values* in
+place while keeping shapes is outside the contract (relations are
+immutable pytrees — see DESIGN.md §7 for the cache-coherence policy).
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Optional, Tuple
+
+from repro.core.database import Database
+from repro.core.jointree import JoinQuery
+
+__all__ = ["query_fingerprint", "schema_fingerprint", "plan_key", "executor_key"]
+
+
+def _digest(payload: str) -> str:
+    return hashlib.sha1(payload.encode()).hexdigest()[:16]
+
+
+def query_fingerprint(query: JoinQuery) -> str:
+    """Structure-only fingerprint of a join query (atom order matters: it is
+    the GYO input order and fixes the canonical flatten order)."""
+    atoms = tuple(
+        (a.relation, a.alias or "", a.variables) for a in query.atoms
+    )
+    return _digest(repr((atoms, query.prob_var)))
+
+
+def schema_fingerprint(db: Database) -> str:
+    """Shape/dtype fingerprint of the database instance (no data values)."""
+    rels = []
+    for name in sorted(db.relations):
+        rel = db.relations[name]
+        cols = tuple(
+            (c, str(rel.columns[c].dtype), int(rel.columns[c].shape[0]))
+            for c in sorted(rel.columns)
+        )
+        rels.append((name, db.schemas.get(name, ()), cols))
+    return _digest(repr(tuple(rels)))
+
+
+def plan_key(query: JoinQuery, rep: str) -> Tuple[str, str]:
+    """Cache key of a shred index: query structure x representation."""
+    return (query_fingerprint(query), rep)
+
+
+def executor_key(
+    query: JoinQuery, rep: str, method: str, project: Optional[Tuple[str, ...]]
+) -> Tuple[str, str, str, Optional[Tuple[str, ...]]]:
+    """Cache key of a compiled plan: the shred key plus everything baked
+    statically into the jitted executor."""
+    return (query_fingerprint(query), rep, method, project)

@@ -1,0 +1,117 @@
+"""Compiled query plans: shred index + jitted executors + capacity metadata.
+
+A ``CompiledPlan`` is the engine's unit of caching (DESIGN.md §7): the GYO
+join tree has been run, the shred index built, and the sample executor
+jitted. Everything data-dependent (the PRNG key, per-call capacity
+overrides) stays a runtime argument, so one plan serves an unbounded stream
+of independent sample draws and full-join flattens without rebuilding or
+retracing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.core import estimate, probe
+from repro.core.jointree import JoinQuery
+from repro.core.poisson import JoinSample
+from repro.core.shred import Shred
+from repro.core.yannakakis import flatten
+
+from . import executors
+from .capacity import CapacityPolicy, DEFAULT_POLICY
+
+__all__ = ["CompiledPlan"]
+
+
+@dataclasses.dataclass
+class CompiledPlan:
+    """One (query fingerprint, rep, method, project) entry of the plan cache.
+
+    w / p / prefE are the root-level weight, probability, and exclusive
+    prefix vectors (p is None for queries without ``prob_var`` — such plans
+    serve full joins and uniform sampling only).
+    """
+
+    query: JoinQuery
+    rep: str                      # representation the shred was built with
+    rep_default: str              # concrete rep used when a call passes None
+    method: str
+    project: Optional[Tuple[str, ...]]
+    shred: Shred
+    policy: CapacityPolicy = DEFAULT_POLICY
+
+    def __post_init__(self):
+        root = self.shred.root
+        self.w = root.weight
+        self.prefE = self.shred.root_prefE
+        if self.query.prob_var is not None:
+            if self.query.prob_var not in root.variables:
+                raise AssertionError("build_plan must reroot prob_var to the root")
+            self.p = root.data.column(self.query.prob_var)
+        else:
+            self.p = None
+        self._jit = executors.sample_executor(self.method, self.project)
+
+    # -- capacity planning ---------------------------------------------------
+    @property
+    def join_size(self) -> int:
+        return int(self.shred.join_size)
+
+    def expected_k(self) -> float:
+        return float(estimate.expected_sample_size(self.w, self.p))
+
+    def default_capacity(self) -> int:
+        return self.policy.sample_capacity(self.w, self.p)
+
+    def arrival_capacity(self) -> int:
+        return self.policy.arrival_capacity(self.w, self.p)
+
+    # -- execution -----------------------------------------------------------
+    def sample(self, key, cap: Optional[int] = None, rep: Optional[str] = None,
+               acap: Optional[int] = None) -> JoinSample:
+        """One independent Poisson sample draw (fresh randomness per key)."""
+        if self.p is None:
+            raise ValueError("plan has no prob_var; use uniform_sample/full_join")
+        cap = cap or self.default_capacity()
+        if self.join_size == 0:
+            return executors.empty_sample(self.shred, cap)
+        acap = acap or (self.arrival_capacity() if self.method == "exprace" else 0)
+        n = self.join_size if self.method == "ptbern_flat" else 0
+        return self._jit(self.shred, self.w, self.p, self.prefE, key, cap=cap,
+                         rep=rep or self.rep_default, n=n, acap=acap)
+
+    def sample_auto(self, key, max_doublings: Optional[int] = None,
+                    cap: Optional[int] = None,
+                    acap: Optional[int] = None) -> JoinSample:
+        """Redraw with doubled capacity until no overflow (host loop).
+        ``cap``/``acap`` override the policy-derived starting capacities."""
+        if max_doublings is None:
+            max_doublings = self.policy.max_doublings
+        cap = cap or self.default_capacity()
+        acap = acap or (self.arrival_capacity() if self.method == "exprace"
+                        else 0)
+        for _ in range(max_doublings):
+            s = self.sample(key, cap=cap, acap=acap)
+            if not bool(s.overflow):
+                return s
+            cap *= 2
+            acap *= 2
+        raise RuntimeError("sample capacity still overflowing after doublings")
+
+    def uniform_sample(self, key, p: float, cap: Optional[int] = None,
+                       method: str = "hybrid") -> JoinSample:
+        """beta_p with a fixed uniform probability (paper §6.1)."""
+        n = self.join_size
+        if cap is None:
+            cap = self.policy.uniform_capacity(n, p)
+        ps = executors.uniform_positions_fn(method)(key, p, n, cap)
+        pos = jnp.minimum(ps.positions, max(n - 1, 0))
+        cols = probe.get(self.shred, pos, rep=self.rep_default)
+        return JoinSample(cols, ps.positions, ps.count, ps.overflow)
+
+    def full_join(self, rep: Optional[str] = None) -> Dict[str, jnp.ndarray]:
+        """Yannakakis via the cached index: flatten mu* by bulk probe."""
+        return flatten(self.shred, rep=rep or self.rep_default)

@@ -31,14 +31,18 @@ def _kernel(p_ref, u_ref, out_ref, carry_ref):
 
     p = p_ref[0, 0]
     u = u_ref[...]
-    inv = 1.0 / jnp.log1p(-jnp.clip(p, 1e-12, 1.0 - 1e-7))
-    gaps = jnp.floor(jnp.log(jnp.maximum(u, 1e-12)) * inv)
+    # divide (not multiply by reciprocal): floor() amplifies the last-ulp
+    # difference into off-by-one positions vs the oracle at small p.
+    denom = jnp.log1p(-jnp.clip(p, 1e-12, 1.0 - 1e-7))
+    gaps = jnp.floor(jnp.log(jnp.maximum(u, 1e-12)) / denom)
     step = jnp.minimum(gaps, 2_000_000_000.0).astype(jnp.int32) + 1
-    row_sum = jnp.sum(step, axis=1)
+    # dtype pinned: under jax x64 (enabled by repro.core) jnp.sum would
+    # promote int32 -> int64, which the int32 out_ref store rejects.
+    row_sum = jnp.sum(step, axis=1, dtype=jnp.int32)
     row_off = jnp.cumsum(row_sum) - row_sum
     flat = jnp.cumsum(step, axis=1) + row_off[:, None] + carry_ref[0]
     out_ref[...] = flat - 1
-    carry_ref[0] = carry_ref[0] + jnp.sum(row_sum)
+    carry_ref[0] = carry_ref[0] + jnp.sum(row_sum, dtype=jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

@@ -29,11 +29,13 @@ def _kernel(x_ref, out_ref, carry_ref):
         carry_ref[0] = jnp.zeros((), x_ref.dtype)
 
     x = x_ref[...]
-    row_sum = jnp.sum(x, axis=1)
+    # dtype pinned: under jax x64 (enabled by repro.core) jnp.sum would
+    # promote int32 -> int64, which the int32 out_ref store rejects.
+    row_sum = jnp.sum(x, axis=1, dtype=x.dtype)
     row_off = jnp.cumsum(row_sum) - row_sum  # exclusive row offsets
     flat = jnp.cumsum(x, axis=1) + row_off[:, None] + carry_ref[0]
     out_ref[...] = flat
-    carry_ref[0] = carry_ref[0] + jnp.sum(row_sum)
+    carry_ref[0] = carry_ref[0] + jnp.sum(row_sum, dtype=x.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))

@@ -147,11 +147,11 @@ class HloCost:
             obytes = 0
             operand_names = []
             if args:
-                for a in args.group(1).split(","):
-                    a = a.strip()
-                    if a.startswith("%"):
-                        operand_names.append(a)
-                        obytes += _nbytes(op_shapes.get(a, []))
+                # operands may be typed ("f32[128,128]{1,0} %x") and shapes
+                # contain commas, so extract names by pattern, not by split
+                for a in re.findall(r"%[\w.\-]+", args.group(1)):
+                    operand_names.append(a)
+                    obytes += _nbytes(op_shapes.get(a, []))
             if count_bytes:
                 # Fusion-subsumed HBM model: this CPU-backend HLO splits
                 # elementwise chains into thousands of micro-"fusions" that a

@@ -1,0 +1,41 @@
+"""Optional-dependency shims for the test suite.
+
+The container image does not guarantee ``hypothesis``; property tests must
+*skip* (not break collection) when it is absent, while the deterministic
+tests in the same modules keep running. Usage:
+
+    from _optional import HAVE_HYPOTHESIS, given, settings, st, HealthCheck
+
+When hypothesis is installed these are the real objects; otherwise ``given``
+returns a skip decorator and ``st``/``settings``/``HealthCheck`` are inert
+stand-ins that absorb strategy construction at class-body time.
+"""
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:  # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
+
+    class _AnyAttr:
+        """Absorbs attribute access / calls made while building strategies."""
+
+        def __getattr__(self, name):
+            return _AnyAttr()
+
+        def __call__(self, *args, **kwargs):
+            return _AnyAttr()
+
+    st = _AnyAttr()
+    HealthCheck = _AnyAttr()
+
+    def given(*_args, **_kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+
+        return deco

@@ -1,0 +1,30 @@
+"""Docs integrity: DESIGN.md exists and no in-code citation dangles.
+
+Runs tools/check_docs.py inside the tier-1 suite so a PR that adds a
+section citation of DESIGN.md without the matching section fails fast.
+"""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_docs  # noqa: E402
+
+
+def test_design_md_exists():
+    assert (ROOT / "DESIGN.md").is_file()
+
+
+def test_no_dangling_design_citations(capsys):
+    rc = check_docs.main(str(ROOT))
+    assert rc == 0, capsys.readouterr().err
+
+
+def test_citations_are_found():
+    """The scanner actually sees the known citations (guards against a
+    regex regression silently turning the lint into a no-op)."""
+    cites = check_docs.collect_citations(ROOT)
+    tokens = {t for _, _, t in cites}
+    assert {"3", "4", "7", "8", "Arch-applicability"} <= tokens
+    assert len(cites) >= 20

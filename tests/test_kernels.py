@@ -1,10 +1,11 @@
 """Per-kernel validation: Pallas (interpret=True) vs pure-jnp oracles,
-sweeping shapes and dtypes, plus hypothesis property tests."""
+sweeping shapes and dtypes, plus hypothesis property tests (which skip
+gracefully when hypothesis is not installed — see tests/_optional.py)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _optional import given, settings, st  # hypothesis, or skip shims
 
 from repro.kernels import ops
 from repro.kernels import ref

@@ -9,12 +9,15 @@ import pytest
 
 SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
-    from jax.sharding import AxisType
     from repro.parallel.pipeline import pipeline_forward, reference_forward
 
     assert len(jax.devices()) == 4
-    mesh = jax.make_mesh((4,), ("stage",),
-                         axis_types=(AxisType.Auto,))
+    try:                         # jax >= 0.5; older releases have no AxisType
+        from jax.sharding import AxisType
+        mesh = jax.make_mesh((4,), ("stage",),
+                             axis_types=(AxisType.Auto,))
+    except ImportError:
+        mesh = jax.make_mesh((4,), ("stage",))
 
     D = 16
     def stage_fn(p, x):          # shape-preserving block

@@ -10,7 +10,7 @@ import itertools
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st, HealthCheck
+from _optional import HealthCheck, given, settings, st  # hypothesis or shims
 
 from repro.core import (
     Atom, Database, JoinQuery, build_shred, get, build_plan,

@@ -1,0 +1,75 @@
+#!/usr/bin/env python
+"""Lint: every section citation of DESIGN.md in the source tree must
+resolve to a section heading in DESIGN.md.
+
+A citation is any ``§<token>`` on a line that mentions DESIGN.md (so
+"DESIGN.md §3/§4" yields two citations, §3 and §4). A section is declared
+by a markdown heading containing ``§<token>``. Exit 1 and list dangling
+citations otherwise.
+
+Usage:  python tools/check_docs.py [repo_root]
+Also run as part of the tier-1 suite via tests/test_docs.py.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+# Trailing dots are sentence punctuation, not part of the section token.
+_CITE = re.compile(r"§([A-Za-z0-9][A-Za-z0-9.-]*?)(?=[^A-Za-z0-9.-]|$)")
+_SCAN_DIRS = ("src", "benchmarks", "examples", "tests", "tools")
+
+
+def _tokens(line: str):
+    for m in _CITE.finditer(line):
+        yield m.group(1).rstrip(".-")
+
+
+def collect_citations(root: Path):
+    """(file, lineno, token) for every DESIGN.md § citation under root."""
+    out = []
+    for d in _SCAN_DIRS:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            for i, line in enumerate(path.read_text().splitlines(), 1):
+                if "DESIGN.md" not in line:
+                    continue
+                for tok in _tokens(line):
+                    out.append((path.relative_to(root), i, tok))
+    return out
+
+
+def collect_sections(design: Path):
+    sections = set()
+    for line in design.read_text().splitlines():
+        if line.lstrip().startswith("#"):
+            sections.update(_tokens(line))
+    return sections
+
+
+def main(root: str = ".") -> int:
+    rootp = Path(root).resolve()
+    design = rootp / "DESIGN.md"
+    if not design.is_file():
+        print(f"check_docs: {design} does not exist", file=sys.stderr)
+        return 1
+    sections = collect_sections(design)
+    cites = collect_citations(rootp)
+    dangling = [(f, i, t) for f, i, t in cites if t not in sections]
+    if dangling:
+        print("check_docs: dangling DESIGN.md citations:", file=sys.stderr)
+        for f, i, t in dangling:
+            print(f"  {f}:{i}: DESIGN.md §{t} (no such section)",
+                  file=sys.stderr)
+        print(f"  declared sections: {sorted(sections)}", file=sys.stderr)
+        return 1
+    print(f"check_docs: OK — {len(cites)} citations over "
+          f"{len(sections)} sections")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else "."))
