@@ -18,7 +18,7 @@ import time
 import jax
 
 from repro.engine import QueryEngine
-from .timing import row, time_fn
+from .timing import row, time_fn, tiny
 from .workloads import job_like, stats_like
 
 
@@ -29,8 +29,9 @@ def _once(fn) -> float:
 
 
 def run(out):
-    for name, (db, q) in (("job_like", job_like(scale=1200)),
-                          ("stats_like", stats_like(scale=1500))):
+    s1, s2 = (120, 150) if tiny() else (1200, 1500)
+    for name, (db, q) in (("job_like", job_like(scale=s1)),
+                          ("stats_like", stats_like(scale=s2))):
         key = jax.random.key(0)
 
         engine = QueryEngine(db)

@@ -11,25 +11,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
-from .timing import row, time_fn
+from .timing import row, time_fn, tiny
 
 
 def run(out):
     # bsearch probe
-    pref = jnp.cumsum(jax.random.randint(jax.random.key(0), (4096,), 0, 9)).astype(jnp.int32)
+    npref, nq = (512, 1024) if tiny() else (4096, 8192)
+    pref = jnp.cumsum(jax.random.randint(jax.random.key(0), (npref,), 0, 9)).astype(jnp.int32)
     pref = jnp.concatenate([jnp.zeros((1,), jnp.int32), pref])
-    q = jax.random.randint(jax.random.key(1), (8192,), 0, int(pref[-1])).astype(jnp.int32)
+    q = jax.random.randint(jax.random.key(1), (nq,), 0, int(pref[-1])).astype(jnp.int32)
     out(row("kernels/bsearch/pallas", time_fn(ops.searchsorted_prefix, pref, q)))
     out(row("kernels/bsearch/xla", time_fn(
         jax.jit(lambda p, x: jnp.searchsorted(p, x, side='right') - 1), pref, q)))
 
     # prefix sum
-    x = jax.random.randint(jax.random.key(2), (1 << 16,), 0, 9).astype(jnp.int32)
+    x = jax.random.randint(jax.random.key(2), (1 << (12 if tiny() else 16),), 0, 9).astype(jnp.int32)
     out(row("kernels/prefix_sum/pallas", time_fn(ops.prefix_sum, x)))
     out(row("kernels/prefix_sum/xla", time_fn(jax.jit(jnp.cumsum), x)))
 
     # decode attention
-    B, H, S, D = 2, 8, 2048, 64
+    B, H, S, D = (1, 2, 256, 64) if tiny() else (2, 8, 2048, 64)
     ks = jax.random.split(jax.random.key(3), 3)
     qq = jax.random.normal(ks[0], (B, H, D), jnp.float32)
     kk = jax.random.normal(ks[1], (B, H, S, D), jnp.float32)
@@ -41,12 +42,12 @@ def run(out):
             time_fn(jax.jit(ref.flash_decode_ref), qq, kk, vv, bias, reps=3)))
 
     # prefill (full-sequence causal) attention
-    Sq = 1024
+    Sq, blk = (256, 128) if tiny() else (1024, 256)
     q4 = jax.random.normal(ks[0], (1, 4, Sq, 64), jnp.float32)
     k4 = jax.random.normal(ks[1], (1, 4, Sq, 64), jnp.float32)
     v4 = jax.random.normal(ks[2], (1, 4, Sq, 64), jnp.float32)
     out(row("kernels/flash_prefill/pallas-interpret",
-            time_fn(lambda: ops.prefill_attention(q4, k4, v4, block_q=256,
-                                                  block_k=256), reps=3)))
+            time_fn(lambda: ops.prefill_attention(q4, k4, v4, block_q=blk,
+                                                  block_k=blk), reps=3)))
     out(row("kernels/flash_prefill/xla-ref",
             time_fn(jax.jit(ref.flash_prefill_ref), q4, k4, v4, reps=3)))

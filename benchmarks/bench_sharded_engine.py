@@ -1,0 +1,75 @@
+"""Sharded engine: 1-vs-N device throughput and cache behavior (DESIGN.md §8).
+
+Measures what the sharded plan path costs and buys on one host:
+
+  cold    — first sharded call: semijoin pre-filter + N per-shard index
+            builds + shard_map trace (the sharded analogue of the engine's
+            cold path);
+  warm    — same (fingerprint, mesh) again: dict lookup + cached dispatch,
+            zero stacked-shred rebuilds (asserted via CacheStats);
+  1-vs-N  — warm single-device vs warm sharded sample/full-join latency.
+
+On CPU the N "devices" are virtual (one physical socket), so the 1-vs-N
+ratio here measures sharding *overhead*, not speedup; on a real mesh the
+same plan path is the paper's multi-pod scaling argument. Run under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for a real stacked
+path; on one device the suite still exercises it via explicit axes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.engine import QueryEngine, ShardedPlan
+from .timing import row, time_fn, tiny
+from .workloads import qc_workload
+
+
+def _once(fn) -> float:
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return (time.perf_counter() - t0) * 1e6
+
+
+def run(out):
+    devices = len(jax.devices())
+    mesh = jax.make_mesh((devices,), ("data",))
+    db, q = qc_workload(n_persons=500 if tiny() else 4000,
+                        n_pools=12 if tiny() else 80)
+    key = jax.random.key(0)
+
+    engine = QueryEngine(db)
+    us_1_cold = _once(lambda: engine.sample(q, key).positions)
+    us_1_warm = time_fn(lambda: engine.sample(q, key), reps=5)
+    out(row("sharded/sample-1dev-cold", us_1_cold))
+    out(row("sharded/sample-1dev-warm", us_1_warm))
+
+    # Explicit axes force the stacked path even on a single device (labels
+    # say "Nshard" so they never collide with the 1dev baseline rows).
+    smesh = dict(mesh=mesh, axes=("data",))
+    before = engine.stats.snapshot()
+    us_n_cold = _once(lambda: engine.sample(q, key, **smesh).positions)
+    us_n_warm = time_fn(lambda: engine.sample(q, key, **smesh), reps=5)
+    plan = engine.compile_sharded(q, mesh, axes=("data",))
+    assert isinstance(plan, ShardedPlan)
+    rebuilt = engine.stats.shred_builds - before.shred_builds
+    assert rebuilt == 1, \
+        f"warm sharded calls rebuilt the stacked shred ({rebuilt - 1}x)"
+    out(row(f"sharded/sample-{plan.num_shards}shard-cold", us_n_cold,
+            f"devices={devices}"))
+    out(row(f"sharded/sample-{plan.num_shards}shard-warm", us_n_warm,
+            f"1dev/sharded={us_1_warm/us_n_warm:.2f}x"))
+    out(row("sharded/sample-warm-rebuilds", 0.0,
+            f"builds_after_cold={rebuilt - 1}"))  # cold pays exactly one
+
+    us_fj_1 = time_fn(lambda: engine.full_join(q), reps=3)
+    us_fj_n = time_fn(lambda: engine.full_join(q, **smesh), reps=3)
+    out(row("sharded/fulljoin-1dev-warm", us_fj_1))
+    out(row(f"sharded/fulljoin-{plan.num_shards}shard-warm", us_fj_n,
+            f"1dev/sharded={us_fj_1/us_fj_n:.2f}x"))
+
+    st = engine.stats
+    out(row("sharded/cache-stats", 0.0,
+            f"devices={devices};builds={st.shred_builds};"
+            f"hits={st.shred_hits};plan_hits={st.plan_hits}"))

@@ -1,11 +1,17 @@
 """Benchmark harness entry point — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows. Usage:
-    PYTHONPATH=src python -m benchmarks.run [--only fig7,fig9,...]
+    PYTHONPATH=src python -m benchmarks.run [--only fig7,fig9,...] [--tiny]
+
+``--tiny`` shrinks the workload sizes (CI bench-smoke mode: exercises every
+code path, measures nothing meaningful). An ``--only`` filter matching no
+suite is an error (exit 2) — a silent empty run would upload a header-only
+CSV and pass CI.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
 
@@ -14,11 +20,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated substrings to filter suites")
+    ap.add_argument("--tiny", action="store_true",
+                    help="tiny workload sizes (CI smoke; sets REPRO_BENCH_TINY)")
     args = ap.parse_args()
+    if args.tiny:
+        # Before the suite imports: sizes are chosen at module/run scope.
+        os.environ["REPRO_BENCH_TINY"] = "1"
 
     from . import (bench_position_sampling, bench_uniform_e2e, bench_poisson,
                    bench_build_probe, bench_full_join, bench_qc,
-                   bench_caching, bench_engine_cache, bench_kernels, roofline)
+                   bench_caching, bench_engine_cache, bench_sharded_engine,
+                   bench_kernels, roofline)
     suites = [
         ("fig7_position_sampling", bench_position_sampling.run),
         ("fig8_uniform_e2e", bench_uniform_e2e.run),
@@ -28,12 +40,19 @@ def main() -> None:
         ("fig10_qc", bench_qc.run),
         ("table6_caching", bench_caching.run),
         ("engine_cache", bench_engine_cache.run),
+        ("sharded_engine", bench_sharded_engine.run),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]
     if args.only:
-        keys = args.only.split(",")
-        suites = [(n, f) for n, f in suites if any(k in n for k in keys)]
+        keys = [k for k in args.only.split(",") if k]
+        selected = [(n, f) for n, f in suites if any(k in n for k in keys)]
+        if not selected:
+            names = ", ".join(n for n, _ in suites)
+            print(f"benchmarks.run: --only {args.only!r} matched no suites "
+                  f"(available: {names})", file=sys.stderr)
+            sys.exit(2)
+        suites = selected
 
     print("name,us_per_call,derived")
     failures = []

@@ -3,7 +3,7 @@ Mamba2 backbone + SHARED attention block [arXiv:2411.15242; hf].
 Pattern: 18 mamba blocks + 1 shared-attn per repeat, 2 repeats = 38 layers;
 the attention params are tied across repeats (zamba's defining trick).
 Sub-quadratic: long_500k RUNS (shared attn uses a 4096 sliding window at
-500k — deviation noted in DESIGN.md §8)."""
+500k — deviation noted in DESIGN.md §9)."""
 from repro.models.config import ModelConfig
 
 CONFIG = ModelConfig(

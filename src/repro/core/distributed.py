@@ -1,4 +1,4 @@
-"""Multi-pod distributed Poisson sampling (shard_map).
+"""Distributed Poisson sampling: root partitioning and stacked-index build.
 
 Why Poisson sampling scales embarrassingly well (and fixed-size sampling
 does not): the join result is the disjoint union of the joins produced by
@@ -9,66 +9,144 @@ sampling each block independently (with a device-folded PRNG key) is
 rejection, one psum to report the global count. A fixed-k sampler would
 instead need a global multivariate-hypergeometric split of k across shards.
 
-Layout:
-  * root relation rows: block-partitioned over the ("pod", "data") axes
-    (pad to a multiple of the shard count with weight-0 rows);
-  * child relations: replicated (they are the small dimension tables in the
-    paper's workloads; a semijoin pre-filter bounds them by the root's keys);
-  * per-shard shredded index built once (stacked pytree, leading shard dim);
-  * per-step: shard_map(sample) -> per-shard positions/columns + counts.
+This module is the *library* layer the engine's sharded path consumes
+(DESIGN.md §8):
 
-The same module also exposes the dry-run entry used by launch/dryrun.py for
-the paper's own "architecture" on the production meshes.
+  * ``semijoin_filter``     — top-down pre-filter bounding the replicated
+                              child relations by the root's join keys;
+  * ``partition_root``      — block-partition the root with padding
+                              (pad rows are weight-neutralized downstream);
+  * ``build_stacked_shred`` — per-shard shredded indexes, all identical
+                              shapes, stacked into one pytree with a
+                              leading shard axis;
+  * ``fold_shard_key``      — the device-folded PRNG key scheme.
+
+``ShardedPoissonSampler`` is kept as a thin facade over
+``repro.engine.sharding.ShardedPlan`` (the shard_map executors live there),
+mirroring how ``core.PoissonSampler`` facades the single-device engine.
+``launch/dryrun.py`` uses it for the paper's architecture on the
+production meshes.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Dict, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from . import estimate, probe, sampling
 from .database import Database
-from .jointree import Atom, JoinQuery
-from .poisson import JoinSample
-from .relations import Relation
-from .shred import Shred, build_shred
-from repro.compat import axis_size, shard_map
+from .jointree import JoinQuery, JoinTreeNode
+from .relations import Relation, dense_keys
+from .shred import Shred, build_plan, build_shred
+from repro.compat import axis_size
 
-__all__ = ["ShardedPoissonSampler", "partition_root"]
+__all__ = [
+    "RootPartition", "StackedShred", "ShardedPoissonSampler",
+    "partition_root", "semijoin_filter", "build_stacked_shred",
+    "fold_shard_key",
+]
 
 I64 = jnp.int64
 
 
+def fold_shard_key(key, axes: Tuple[str, ...]):
+    """Device-distinct PRNG key inside shard_map: fold the linearized shard
+    coordinate into ``key``. Shard ``s`` of the stacked index lands on the
+    device with linearized coordinate ``s`` (P(axes) block layout), so a
+    host-side loop over ``fold_in(key, s)`` reproduces the per-device keys
+    bit-for-bit — the reproducibility contract tests and the engine's
+    sharded path both rely on."""
+    idx = jnp.zeros((), jnp.int32)
+    for a in axes:
+        idx = idx * axis_size(a) + jax.lax.axis_index(a)
+    return jax.random.fold_in(key, idx)
+
+
+def semijoin_filter(db: Database, query: JoinQuery) -> Database:
+    """Top-down semijoin pre-filter: drop child rows that cannot join.
+
+    Walks the (rerooted) join tree from the root, keeping in each child
+    relation only the rows whose join key occurs in the parent's (already
+    filtered) instance. A relation referenced by several atoms (self joins)
+    keeps the union of the rows any alias needs. The root relation is never
+    filtered — it is the partitioned side.
+
+    Only dangling rows are removed, and the shred build retains dangling
+    tuples with weight 0 anyway, so the join result *and every flat
+    position* are unchanged (DESIGN.md §8); the filter just bounds the
+    replicated child relations by the root's keys before the per-shard
+    index builds.
+    """
+    plan = build_plan(query)
+    keep: Dict[str, np.ndarray] = {}
+
+    def visit(tnode: JoinTreeNode, parent_inst: Optional[Relation]) -> None:
+        inst = db.instance_for(tnode.atom)
+        if parent_inst is not None:
+            shared = sorted(set(parent_inst.attrs) & set(inst.attrs))
+            if shared and inst.num_rows and parent_inst.num_rows:
+                kp, kc = dense_keys([parent_inst.column(v) for v in shared],
+                                    [inst.column(v) for v in shared])
+                mask = np.asarray(jnp.isin(kc, kp))
+            else:  # cross product (or empty side): nothing to prune
+                mask = np.ones((inst.num_rows,), bool)
+            name = tnode.atom.relation
+            keep[name] = mask if name not in keep else (keep[name] | mask)
+            inst = inst.take(jnp.asarray(np.flatnonzero(mask)))
+        for c in tnode.children:
+            visit(c, inst)
+
+    visit(plan, None)
+    keep.pop(plan.atom.relation, None)  # the root is partitioned, not filtered
+    rels = dict(db.relations)
+    for name, mask in keep.items():
+        rels[name] = db.relations[name].take(jnp.asarray(np.flatnonzero(mask)))
+    return Database(rels, db.schemas)
+
+
+@dataclasses.dataclass(frozen=True)
+class RootPartition:
+    """A block partition of the root relation into equal-sized shard dbs.
+
+    ``shards[s]`` holds rows [s*rows_per_shard, (s+1)*rows_per_shard) of the
+    root (short tail shards padded by repeating the last row); children are
+    shared across shards. ``valid[s]`` counts the unpadded rows — the
+    stacked build weight-neutralizes everything beyond it.
+    """
+
+    shards: Tuple[Database, ...]
+    root_name: str
+    rows_per_shard: int
+    valid: Tuple[int, ...]
+
+
 def partition_root(
     db: Database, query: JoinQuery, num_shards: int
-) -> Tuple[Sequence[Database], str]:
+) -> RootPartition:
     """Split the database into ``num_shards`` copies whose root-relation rows
-    block-partition the original (padded with repeat-last rows that are
-    weight-neutralized by a zero probability). Children are replicated."""
-    from .shred import build_plan
-
+    block-partition the original. Pad rows repeat the last row and get a
+    zero probability when the query has a ``prob_var``; the stacked build
+    additionally zeroes their weights, so pads contribute to neither
+    samples nor full joins."""
     plan = build_plan(query)
     root_atom = plan.atom
     root_rel = db.relations[root_atom.relation]
     n = root_rel.num_rows
-    per = -(-n // num_shards)
-    pad = per * num_shards - n
+    per = -(-n // num_shards)  # 0 rows -> every shard empty (nothing to pad)
     prob_col = None
     if query.prob_var is not None:
         schema = db.schemas[root_atom.relation]
         for c, v in zip(schema, root_atom.variables):
             if v == query.prob_var:
                 prob_col = c
-    shards = []
+    shards, valid = [], []
     for s in range(num_shards):
-        lo, hi = s * per, min((s + 1) * per, n)
+        lo, hi = min(s * per, n), min((s + 1) * per, n)
         idx = np.arange(lo, hi)
-        if hi - lo < per:  # pad with last row, neutralized via p = 0
+        if hi - lo < per:  # pad with last row, neutralized via p = 0 + w = 0
             idx = np.concatenate([idx, np.full(per - (hi - lo), max(n - 1, 0))])
         cols = {}
         for c, v in root_rel.columns.items():
@@ -79,15 +157,80 @@ def partition_root(
         rels = dict(db.relations)
         rels[root_atom.relation] = Relation(cols)
         shards.append(Database(rels, db.schemas))
-    return shards, root_atom.relation
+        valid.append(hi - lo)
+    return RootPartition(tuple(shards), root_atom.relation, per, tuple(valid))
+
+
+@dataclasses.dataclass
+class StackedShred:
+    """Per-shard shred indexes stacked into one pytree (leading dim S).
+
+    This is what the engine's shred cache holds for a sharded plan, keyed
+    by (query fingerprint, rep, mesh shape, shard count) — DESIGN.md §8.
+    Pad rows carry weight 0, so ``prefE[s, -1]`` is the true per-shard join
+    size and the shard flattens concatenate to exactly the global flatten.
+    """
+
+    shred: Shred                  # every leaf has a leading shard axis
+    w: jnp.ndarray                # (S, n_root) int64 root weights, pads zeroed
+    p: Optional[jnp.ndarray]      # (S, n_root) root probabilities, or None
+    prefE: jnp.ndarray            # (S, n_root + 1) exclusive weight prefixes
+    num_shards: int
+    root_name: str
+    valid: Tuple[int, ...]        # unpadded root rows per shard
+    join_sizes: Tuple[int, ...]   # concrete per-shard |Q_s(db)|
+
+    @property
+    def join_size(self) -> int:
+        """|Q(db)| — the shard join sizes sum to the global size exactly."""
+        return int(sum(self.join_sizes))
+
+
+def build_stacked_shred(
+    db: Database, query: JoinQuery, num_shards: int, rep: str = "usr",
+    prefilter: bool = True,
+) -> StackedShred:
+    """Build ``num_shards`` identical-shape shred indexes and stack them.
+
+    Children are semijoin-prefiltered once (shared by all shards), the root
+    is block-partitioned, and pad rows are weight-zeroed post-build so they
+    are invisible to sampling *and* flattening. All shards share one pytree
+    structure, so the stack is shard_map-able with in_specs P(axes) on the
+    leading dimension.
+    """
+    base = semijoin_filter(db, query) if prefilter else db
+    part = partition_root(base, query, num_shards)
+    built = []
+    for s, sdb in enumerate(part.shards):
+        sh = build_shred(sdb, query, rep=rep)
+        n = sh.root.num_rows
+        if part.valid[s] < n:
+            w = jnp.where(jnp.arange(n) < part.valid[s], sh.root.weight, 0)
+            root = dataclasses.replace(sh.root, weight=w)
+            prefE = jnp.concatenate([jnp.zeros((1,), I64), jnp.cumsum(w)])
+            sh = Shred(root=root, root_prefE=prefE, rep=sh.rep)
+        built.append(sh)
+    shred = jax.tree.map(lambda *xs: jnp.stack(xs), *built)
+    w = jnp.stack([b.root.weight for b in built])
+    pvar = query.prob_var
+    p = (jnp.stack([b.root.data.column(pvar) for b in built])
+         if pvar is not None else None)
+    prefE = jnp.stack([b.root_prefE for b in built])
+    return StackedShred(
+        shred=shred, w=w, p=p, prefE=prefE, num_shards=num_shards,
+        root_name=part.root_name, valid=part.valid,
+        join_sizes=tuple(int(b.root_prefE[-1]) for b in built),
+    )
 
 
 class ShardedPoissonSampler:
     """Data-parallel Poisson sampling over a device mesh.
 
-    Builds one shredded index per shard (all identical shapes), stacks them
-    into a single pytree with a leading shard axis, and shard_maps the
-    per-step sampler over the mesh's data-like axes.
+    Facade over the engine's sharded path (``repro.engine.sharding``): one
+    stacked index, shard_map'd per-step sampling with device-folded keys.
+    Kept for API stability and the dry-run entry; new code should call
+    ``QueryEngine.sample(..., mesh=...)`` so indexes are cached across
+    queries (DESIGN.md §8).
     """
 
     def __init__(
@@ -99,66 +242,30 @@ class ShardedPoissonSampler:
         rep: str = "usr",
         method: str = "exprace",
     ):
+        # Lazy: repro.engine imports repro.core (same pattern as poisson.py).
+        from repro.engine import QueryEngine
+
         self.mesh = mesh
         self.axes = axes
         self.rep = "usr" if rep == "both" else rep
         self.method = method
-        self.num_shards = int(np.prod([mesh.shape[a] for a in axes]))
-        shards, self.root_name = partition_root(db, query, self.num_shards)
+        self.engine = QueryEngine(db, rep=rep)
+        self._plan = self.engine.compile_sharded(
+            query, mesh, axes=axes, rep=rep, method=method)
+        self.num_shards = self._plan.num_shards
+        self.root_name = self._plan.stacked.root_name
+        self.shred = self._plan.stacked.shred
+        self.w = self._plan.stacked.w
+        self.p = self._plan.stacked.p
+        self.prefE = self._plan.stacked.prefE
+        self.cap = self._plan.cap
+        self.acap = self._plan.acap
 
-        built = [build_shred(sdb, query, rep=rep) for sdb in shards]
-        self.shred = jax.tree.map(lambda *xs: jnp.stack(xs), *built)
-        root = built[0].root
-        pvar = query.prob_var
-        self.w = jnp.stack([b.root.weight for b in built])
-        self.p = jnp.stack([b.root.data.column(pvar) for b in built])
-        self.prefE = jnp.stack([b.root_prefE for b in built])
-
-        mean = float(sum(float(estimate.expected_sample_size(w, p))
-                         for w, p in zip(self.w, self.p)) / self.num_shards)
-        std = max(float(estimate.sample_std(self.w[0], self.p[0])), 1.0)
-        self.cap = estimate.plan_capacity(mean, std)
-        mass = float(estimate.exprace_arrival_mass(self.w[0], self.p[0]))
-        self.acap = estimate.plan_capacity(mass * 1.1 + 8, mass**0.5)
-
-        spec = P(axes)  # shard the leading (stacked) dim over the data axes
-        self._sharded = jax.jit(
-            shard_map(
-                partial(self._local_sample, cap=self.cap, acap=self.acap,
-                        rep=self.rep, method=self.method, axes=self.axes),
-                mesh=mesh,
-                in_specs=(spec, spec, spec, spec, P()),
-                out_specs=(spec, P()),
-                check_vma=False,
-            )
-        )
-
-    @staticmethod
-    def _local_sample(shred, w, p, prefE, key, *, cap, acap, rep, method, axes):
-        # Fold the shard coordinate into the key: independent trials per shard.
-        idx = jnp.zeros((), jnp.int32)
-        for a in axes:
-            idx = idx * axis_size(a) + jax.lax.axis_index(a)
-        key = jax.random.fold_in(key, idx)
-        # Drop the leading (stacked) singleton shard dim.
-        shred, w, p, prefE = jax.tree.map(lambda x: x[0], (shred, w, p, prefE))
-        # Lazy: the executor lives in repro.engine (which imports repro.core).
-        from repro.engine.executors import _sample_jit
-
-        s = _sample_jit(shred, w, p, prefE, key, cap=cap, rep=rep,
-                        method=method, acap=acap)
-        total = jax.lax.psum(s.count, axes)
-        # Re-add the shard dim so out_specs can concatenate across shards.
-        s = jax.tree.map(lambda x: x[None], s)
-        return s, total
-
-    def sample_step(self, key) -> Tuple[JoinSample, jnp.ndarray]:
+    def sample_step(self, key):
         """One independent global Poisson sample. Returns the sharded
         JoinSample (leading dim = shards) and the global count."""
-        return self._sharded(self.shred, self.w, self.p, self.prefE, key)
+        return self._plan.sample_step(key)
 
     # -- dry-run support -----------------------------------------------------
     def lower_step(self):
-        key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
-        args = jax.eval_shape(lambda: (self.shred, self.w, self.p, self.prefE))
-        return self._sharded.lower(*args, key)
+        return self._plan.lower_step()

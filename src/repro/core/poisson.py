@@ -82,7 +82,7 @@ class PoissonSampler:
         projecting the sample is exact; we simply restrict GET's output
         columns (y must be in A). Set-based (duplicate-eliminating) free-
         connex projection would need Carmeli et al.'s Q'/D' reduction —
-        documented as out of scope in DESIGN.md §8."""
+        documented as out of scope in DESIGN.md §9."""
         # Imported lazily: repro.engine imports repro.core, and this module
         # is part of repro.core's own import sequence.
         from repro.engine import QueryEngine

@@ -120,7 +120,7 @@ def binom_positions(key, p, n: int, cap: int) -> PositionSample:
     (the indices of the k smallest of n iid keys form a uniform k-subset).
     Note: Theta(n log n) here vs the O(n min(p,1-p) + np) of [7]/[23] —
     Vitter-style sequential subset draws don't vectorize; the paper discards
-    BINOM after its Fig. 7 anyway (DESIGN.md §8)."""
+    BINOM after its Fig. 7 anyway (DESIGN.md §9)."""
     kk, ku = jax.random.split(key)
     k = jax.random.binomial(kk, n=jnp.asarray(n, F64), p=jnp.asarray(p, F64)).astype(I64)
     k = jnp.minimum(k, n)

@@ -10,23 +10,33 @@ the paper derives from the shredded random-access index, from one build:
     n      = engine.join_size(query)              # |Q(db)|, O(1)
     print(engine.explain(query))
 
+Sharded execution is the same API over a device mesh (DESIGN.md §8):
+
+    smp  = engine.sample(query, key, mesh=mesh)   # N-device Poisson trials
+    full = engine.full_join(query, mesh=mesh)     # N-device flatten, gathered
+
 Public API:
     QueryEngine       plan/cache/dispatch over one database
     CompiledPlan      a cached plan: shred index + jitted executors
+    ShardedPlan       a cached sharded plan: stacked index + shard_map jit
+    plan_shards       the shard planner (mesh x root size x policy)
     CapacityPolicy    explicit static-shape capacity & overflow policy
     CacheStats        observable shred/plan cache counters
-    fingerprint.*     structure-only cache keys
+    fingerprint.*     structure-only cache keys (incl. mesh shape)
 
 The legacy entry points (``core.PoissonSampler``, ``core.yannakakis
-.full_join``) are thin facades over this engine; new code should construct
-a ``QueryEngine`` directly so repeated queries share its caches.
+.full_join``, ``core.distributed.ShardedPoissonSampler``) are thin facades
+over this engine; new code should construct a ``QueryEngine`` directly so
+repeated queries share its caches.
 """
 from .capacity import CapacityPolicy, DEFAULT_POLICY
 from .engine import CacheStats, QueryEngine
-from .fingerprint import query_fingerprint, schema_fingerprint
+from .fingerprint import mesh_fingerprint, query_fingerprint, schema_fingerprint
 from .plan import CompiledPlan
+from .sharding import ShardedPlan, ShardPlan, plan_shards
 
 __all__ = [
-    "QueryEngine", "CompiledPlan", "CapacityPolicy", "DEFAULT_POLICY",
-    "CacheStats", "query_fingerprint", "schema_fingerprint",
+    "QueryEngine", "CompiledPlan", "ShardedPlan", "ShardPlan", "plan_shards",
+    "CapacityPolicy", "DEFAULT_POLICY", "CacheStats",
+    "query_fingerprint", "schema_fingerprint", "mesh_fingerprint",
 ]

@@ -28,16 +28,20 @@ __all__ = ["CapacityPolicy", "DEFAULT_POLICY"]
 class CapacityPolicy:
     """Capacity planning knobs for one engine instance.
 
-    sigmas:        headroom in standard deviations (6 -> P(overflow) ~ 1e-9).
-    slack:         additive lane slack on top of the sigma headroom.
-    lane_multiple: round capacities up to this multiple (TPU lane width).
-    max_doublings: redraw attempts in auto mode before giving up.
+    sigmas:         headroom in standard deviations (6 -> P(overflow) ~ 1e-9).
+    slack:          additive lane slack on top of the sigma headroom.
+    lane_multiple:  round capacities up to this multiple (TPU lane width).
+    max_doublings:  redraw attempts in auto mode before giving up.
+    min_shard_rows: the shard planner (DESIGN.md §8) never splits the root
+                    relation below this many rows per shard — finer splits
+                    are all padding and no work.
     """
 
     sigmas: float = 6.0
     slack: int = 64
     lane_multiple: int = 128
     max_doublings: int = 8
+    min_shard_rows: int = 8
 
     def plan(self, mean: float, std: float) -> int:
         return estimate.plan_capacity(
@@ -60,6 +64,12 @@ class CapacityPolicy:
         """Capacity for a uniform beta_p sample over n positions."""
         mean = n * p
         return self.plan(mean, (mean * max(1.0 - p, 0.0)) ** 0.5)
+
+    def flatten_capacity(self, max_shard_join: int) -> int:
+        """Static per-shard probe capacity for the sharded full join: the
+        largest shard's join size, lane-rounded (DESIGN.md §8)."""
+        return estimate.round_up(max(int(max_shard_join), 1),
+                                 self.lane_multiple)
 
 
 DEFAULT_POLICY = CapacityPolicy()

@@ -14,31 +14,45 @@ classical acyclic join processing (Yannakakis / SYA) and Poisson sampling
 Repeated and batched queries with the same fingerprint skip GYO, index
 construction, and XLA retracing entirely — the warm path is a dict lookup
 plus one cached-trace dispatch. Both caches are LRU-bounded.
+
+Sharded execution (DESIGN.md §8) is the same contract over a device mesh:
+``sample(..., mesh=...)`` / ``full_join(..., mesh=...)`` route through a
+shard planner to stacked per-shard indexes held in the *same* shred cache
+(keyed by fingerprint x rep x mesh shape x shard count), so the warm
+sharded path also performs zero index rebuilds.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple, Union
 
 import jax.numpy as jnp
 
 from repro.core.database import Database
+from repro.core.distributed import StackedShred, build_stacked_shred
 from repro.core.jointree import JoinQuery
 from repro.core.poisson import JoinSample
 from repro.core.shred import Shred, build_plan, build_shred
 from repro.core import yannakakis
 
 from .capacity import CapacityPolicy, DEFAULT_POLICY
-from .fingerprint import executor_key, plan_key
+from .fingerprint import (
+    executor_key, mesh_fingerprint, plan_key, query_fingerprint,
+    sharded_executor_key, sharded_plan_key,
+)
 from .plan import CompiledPlan
+from .sharding import ShardedPlan, plan_shards
 
 __all__ = ["QueryEngine", "CacheStats"]
 
 
 @dataclasses.dataclass
 class CacheStats:
-    """Observable cache behavior (asserted in tests, reported by serve)."""
+    """Observable cache behavior (asserted in tests, reported by serve).
+
+    Stacked (sharded) index builds and hits count in the same
+    ``shred_builds`` / ``shred_hits`` — one index economy, two layouts."""
 
     shred_builds: int = 0
     shred_hits: int = 0
@@ -75,6 +89,9 @@ class QueryEngine:
         self.stats = CacheStats()
         self._shreds: "collections.OrderedDict[Tuple, Shred]" = collections.OrderedDict()
         self._plans: "collections.OrderedDict[Tuple, CompiledPlan]" = collections.OrderedDict()
+        # Shard-planner verdicts (tiny; root size + mesh shape + policy are
+        # all engine-fixed, so a verdict never changes until rebind()).
+        self._shard_verdicts: "collections.OrderedDict[Tuple, object]" = collections.OrderedDict()
 
     # -- cache plumbing ------------------------------------------------------
     def _shred_for(self, query: JoinQuery, rep: str) -> Shred:
@@ -91,6 +108,23 @@ class QueryEngine:
             self._shreds.popitem(last=False)
         return shred
 
+    def _stacked_shred_for(self, query: JoinQuery, rep: str, mesh,
+                           num_shards: int) -> StackedShred:
+        """The stacked per-shard index for a sharded plan; lives in the same
+        LRU as single-device shreds under a mesh-extended key."""
+        key = sharded_plan_key(query, rep, mesh, num_shards)
+        hit = self._shreds.get(key)
+        if hit is not None:
+            self._shreds.move_to_end(key)
+            self.stats.shred_hits += 1
+            return hit
+        self.stats.shred_builds += 1
+        stacked = build_stacked_shred(self.db, query, num_shards, rep=rep)
+        self._shreds[key] = stacked
+        while len(self._shreds) > self.max_plans:
+            self._shreds.popitem(last=False)
+        return stacked
+
     def compile(self, query: JoinQuery, *, rep: Optional[str] = None,
                 method: str = "exprace",
                 project: Optional[tuple] = None) -> CompiledPlan:
@@ -99,7 +133,7 @@ class QueryEngine:
         ``project``: bag-based projection attributes A for queries of the
         paper's form beta_y(pi_A(Q^)) (eq. 2). Sampling first and projecting
         the sample is exact for bag projection; set-based free-connex
-        projection is out of scope (DESIGN.md §8).
+        projection is out of scope (DESIGN.md §9).
         """
         rep = rep or self.rep
         project = tuple(project) if project else None
@@ -124,6 +158,53 @@ class QueryEngine:
             self._plans.popitem(last=False)
         return plan
 
+    def compile_sharded(self, query: JoinQuery, mesh, *,
+                        axes: Optional[tuple] = None,
+                        rep: Optional[str] = None,
+                        method: str = "exprace",
+                        project: Optional[tuple] = None,
+                        ) -> Union[CompiledPlan, ShardedPlan]:
+        """Plan + stacked index + shard_map jit for a query over ``mesh``.
+
+        The shard planner picks the partition axes/count from the mesh
+        shape, the root relation size, and the engine's ``CapacityPolicy``
+        (pass ``axes`` to pin them). Degenerate plans (one shard, no axes)
+        transparently fall back to the single-device ``CompiledPlan`` — a
+        1-device mesh costs nothing over not passing one (DESIGN.md §8).
+        """
+        rep = rep or self.rep
+        fp = query_fingerprint(query)
+        vkey = (fp, mesh_fingerprint(mesh),
+                tuple(axes) if axes is not None else None)
+        sp = self._shard_verdicts.get(vkey)
+        if sp is None:  # GYO + planner only on the first sighting
+            root_atom = build_plan(query).atom
+            root_rows = self.db.relations[root_atom.relation].num_rows
+            sp = plan_shards(mesh, root_rows, self.policy, axes=axes)
+            self._shard_verdicts[vkey] = sp
+            while len(self._shard_verdicts) > self.max_plans:
+                self._shard_verdicts.popitem(last=False)
+        if not sp.axes:
+            return self.compile(query, rep=rep, method=method, project=project)
+        project = tuple(project) if project else None
+        key = sharded_executor_key(query, rep, method, project, mesh, sp.axes)
+        hit = self._plans.get(key)
+        if hit is not None:
+            self._plans.move_to_end(key)
+            self.stats.plan_hits += 1
+            return hit
+        self.stats.plan_misses += 1
+        plan = ShardedPlan(
+            query=query, rep=rep, method=method, project=project,
+            mesh=mesh, axes=sp.axes,
+            stacked=self._stacked_shred_for(query, rep, mesh, sp.num_shards),
+            policy=self.policy,
+        )
+        self._plans[key] = plan
+        while len(self._plans) > self.max_plans:
+            self._plans.popitem(last=False)
+        return plan
+
     def rebind(self, db: Database) -> "QueryEngine":
         """Bind a new database instance, dropping both caches. Always
         invalidates — even an identical schema fingerprint can carry
@@ -132,28 +213,62 @@ class QueryEngine:
         self.db = db
         self._shreds.clear()
         self._plans.clear()
+        self._shard_verdicts.clear()  # root sizes may differ
         return self
 
     # -- entry points --------------------------------------------------------
-    def full_join(self, query: JoinQuery, *,
-                  rep: Optional[str] = None) -> Dict[str, jnp.ndarray]:
-        """Yannakakis full join via the cached index (SYA; Prop 4.4/4.5)."""
-        return self.compile(query, rep=rep).full_join(rep=rep)
+    def full_join(self, query: JoinQuery, *, rep: Optional[str] = None,
+                  mesh=None, axes: Optional[tuple] = None,
+                  ) -> Dict[str, jnp.ndarray]:
+        """Yannakakis full join via the cached index (SYA; Prop 4.4/4.5).
+
+        With ``mesh=``, the root is block-partitioned over the mesh's data
+        axes and each shard flattens its block through the stacked index;
+        the gathered result is bit-identical to the single-device path,
+        order included (DESIGN.md §8)."""
+        if mesh is not None:
+            plan = self.compile_sharded(query, mesh, axes=axes, rep=rep)
+            if isinstance(plan, ShardedPlan):
+                return plan.full_join()
+        else:
+            plan = self.compile(query, rep=rep)
+        return plan.full_join(rep=rep)
 
     def poisson_sample(self, query: JoinQuery, key, *,
                        cap: Optional[int] = None, acap: Optional[int] = None,
                        rep: Optional[str] = None, method: str = "exprace",
                        project: Optional[tuple] = None,
-                       auto: bool = False) -> JoinSample:
+                       auto: bool = False, mesh=None,
+                       axes: Optional[tuple] = None) -> JoinSample:
         """One independent Poisson sample of ``beta_y(Q)`` via the cached
-        index. ``auto=True`` applies the policy's redraw-on-overflow loop."""
+        index. ``auto=True`` applies the policy's redraw-on-overflow loop.
+
+        With ``mesh=``, per-shard trials run under device-folded keys and
+        one psum reports the global count — distributionally identical to
+        the global draw, and bit-reproducible against a host loop folding
+        the shard index into the same base key (DESIGN.md §8). Degenerate
+        meshes fall back to the single-device plan transparently."""
         if query.prob_var is None:
             raise ValueError("Poisson sampling needs query.prob_var (beta_y)")
-        plan = self.compile(query, rep=rep, method=method, project=project)
+        if mesh is not None:
+            plan = self.compile_sharded(query, mesh, axes=axes, rep=rep,
+                                        method=method, project=project)
+            if isinstance(plan, ShardedPlan):
+                if auto:
+                    return plan.sample_auto(key, cap=cap, acap=acap)
+                return plan.sample(key, cap=cap, acap=acap)
+            # degenerate mesh: compile_sharded already fell back to the
+            # single-device CompiledPlan — reuse it, don't compile twice
+        else:
+            plan = self.compile(query, rep=rep, method=method, project=project)
         if auto:
             return plan.sample_auto(key, cap=cap, acap=acap)
         return plan.sample(key, cap=cap, acap=acap,
                            rep=rep if rep != "both" else None)
+
+    # ``sample`` is the preferred name for the Poisson entry point; kwargs
+    # (including ``mesh=``) are identical.
+    sample = poisson_sample
 
     def uniform_sample(self, query: JoinQuery, key, p: float, *,
                        cap: Optional[int] = None, method: str = "hybrid",

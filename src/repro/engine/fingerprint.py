@@ -24,7 +24,10 @@ from typing import Optional, Tuple
 from repro.core.database import Database
 from repro.core.jointree import JoinQuery
 
-__all__ = ["query_fingerprint", "schema_fingerprint", "plan_key", "executor_key"]
+__all__ = [
+    "query_fingerprint", "schema_fingerprint", "mesh_fingerprint",
+    "plan_key", "executor_key", "sharded_plan_key", "sharded_executor_key",
+]
 
 
 def _digest(payload: str) -> str:
@@ -64,3 +67,32 @@ def executor_key(
     """Cache key of a compiled plan: the shred key plus everything baked
     statically into the jitted executor."""
     return (query_fingerprint(query), rep, method, project)
+
+
+def mesh_fingerprint(mesh) -> Tuple[Tuple[str, int], ...]:
+    """Shape-only fingerprint of a device mesh: ordered (axis, size) pairs.
+
+    Two meshes with the same axis names and sizes share stacked shreds and
+    sharded plans (DESIGN.md §8). Device *identity* is deliberately not
+    keyed — a same-shape mesh over different devices revalidates nothing
+    (the cached shard_map dispatches on its original mesh), matching the
+    structure-only philosophy of the other fingerprints.
+    """
+    return tuple((a, int(mesh.shape[a])) for a in mesh.axis_names)
+
+
+def sharded_plan_key(query: JoinQuery, rep: str, mesh,
+                     num_shards: int) -> Tuple:
+    """Cache key of a *stacked* shred index: the single-device shred key
+    extended with the mesh shape and shard count."""
+    return (query_fingerprint(query), rep, mesh_fingerprint(mesh), num_shards)
+
+
+def sharded_executor_key(
+    query: JoinQuery, rep: str, method: str,
+    project: Optional[Tuple[str, ...]], mesh, axes: Tuple[str, ...],
+) -> Tuple:
+    """Cache key of a sharded compiled plan: everything static in the
+    shard_map executors, including the partition axes."""
+    return (query_fingerprint(query), rep, method, project,
+            mesh_fingerprint(mesh), tuple(axes))

@@ -23,7 +23,22 @@ from repro.core.yannakakis import flatten
 from . import executors
 from .capacity import CapacityPolicy, DEFAULT_POLICY
 
-__all__ = ["CompiledPlan"]
+__all__ = ["CompiledPlan", "redraw_with_doubling"]
+
+
+def redraw_with_doubling(draw, cap: int, acap: int, max_doublings: int):
+    """The shared auto-capacity loop (host-side; DESIGN.md §7): call
+    ``draw(cap, acap)`` until the returned sample reports no overflow,
+    doubling both capacities between attempts. Used by the single-device
+    ``CompiledPlan`` and the sharded ``ShardedPlan`` alike — overflow is
+    always flagged, never silent."""
+    for _ in range(max_doublings):
+        s = draw(cap, acap)
+        if not bool(s.overflow):
+            return s
+        cap *= 2
+        acap *= 2
+    raise RuntimeError("sample capacity still overflowing after doublings")
 
 
 @dataclasses.dataclass
@@ -93,13 +108,9 @@ class CompiledPlan:
         cap = cap or self.default_capacity()
         acap = acap or (self.arrival_capacity() if self.method == "exprace"
                         else 0)
-        for _ in range(max_doublings):
-            s = self.sample(key, cap=cap, acap=acap)
-            if not bool(s.overflow):
-                return s
-            cap *= 2
-            acap *= 2
-        raise RuntimeError("sample capacity still overflowing after doublings")
+        return redraw_with_doubling(
+            lambda c, a: self.sample(key, cap=c, acap=a),
+            cap, acap, max_doublings)
 
     def uniform_sample(self, key, p: float, cap: Optional[int] = None,
                        method: str = "hybrid") -> JoinSample:

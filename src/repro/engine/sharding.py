@@ -1,0 +1,294 @@
+"""Sharded execution as a first-class engine path (DESIGN.md §8).
+
+Two pieces:
+
+  * ``plan_shards`` — the shard planner: picks the shard axes/count from
+    the mesh shape, the root relation size, and the engine's
+    ``CapacityPolicy`` (never shards over model-parallel axes; never splits
+    the root below ``min_shard_rows`` rows per shard);
+  * ``ShardedPlan`` — the sharded analogue of ``CompiledPlan``: a stacked
+    per-shard index (built by ``core.distributed.build_stacked_shred``,
+    held in the engine's shred cache) plus jitted shard_map executors for
+    both entry points — per-shard Poisson trials with device-folded keys
+    and a psum'd global count, and per-shard Yannakakis flatten whose
+    gathered shards concatenate to exactly the single-device flatten.
+
+Poisson sampling shards without coordination because trials are
+independent per tuple; the device-folded key scheme
+(``core.distributed.fold_shard_key``) makes the result distributionally
+identical to a global draw and bit-reproducible against a host-side
+emulation that folds the shard index into the same base key.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
+from repro.core import estimate, probe
+from repro.core.distributed import StackedShred, fold_shard_key
+from repro.core.jointree import JoinQuery
+from repro.core.poisson import JoinSample
+
+from . import executors
+from .capacity import CapacityPolicy, DEFAULT_POLICY
+from .plan import redraw_with_doubling
+
+__all__ = ["ShardPlan", "ShardedPlan", "plan_shards", "BATCH_AXES"]
+
+I64 = jnp.int64
+
+# Data-like mesh axes the root may be partitioned over; model-parallel axes
+# replicate the index (they shard the *model*, not the data).
+BATCH_AXES = ("pod", "data")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardPlan:
+    """The planner's verdict: which mesh axes shard the root, into how many
+    blocks. ``axes == ()`` means "do not shard" (route to the single-device
+    plan)."""
+
+    axes: Tuple[str, ...]
+    num_shards: int
+
+
+def plan_shards(
+    mesh: Mesh, root_rows: int,
+    policy: CapacityPolicy = DEFAULT_POLICY,
+    axes: Optional[Tuple[str, ...]] = None,
+) -> ShardPlan:
+    """Pick shard axes and count from the mesh, root size, and policy.
+
+    Auto mode (``axes=None``) uses the mesh's data-like axes (``pod``,
+    ``data`` — or the sole axis of a single-axis mesh), then drops trailing
+    axes while a shard would fall under ``policy.min_shard_rows`` root rows
+    — finer splits are all padding and no work. An explicit ``axes`` tuple
+    is honored as-is (the dry-run and facade callers own their layout).
+    """
+    if axes is None:
+        picked = tuple(a for a in BATCH_AXES if a in mesh.axis_names)
+        if not picked and len(mesh.axis_names) == 1 \
+                and mesh.axis_names[0] != "model":
+            picked = tuple(mesh.axis_names)  # single-axis custom meshes
+
+        def count(ax):
+            return int(np.prod([mesh.shape[a] for a in ax])) if ax else 1
+
+        while picked and count(picked) > 1 \
+                and root_rows // count(picked) < policy.min_shard_rows:
+            picked = picked[:-1]
+        if count(picked) <= 1:
+            return ShardPlan((), 1)
+        return ShardPlan(picked, count(picked))
+    axes = tuple(axes)
+    n = int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+    return ShardPlan(axes, n)
+
+
+class ShardedPlan:
+    """One sharded entry of the plan cache: stacked index + shard_map
+    executors, keyed by (query fingerprint, rep, method, project, mesh
+    shape, axes) — the sharded analogue of ``CompiledPlan``.
+
+    Everything data-dependent (the PRNG key, capacity overrides) stays a
+    runtime argument; each distinct (cap, acap) pair is one cached
+    shard_map trace, so warm sharded calls are a dict lookup plus one
+    cached dispatch — zero shred rebuilds (asserted by ``CacheStats`` in
+    ``tests/test_sharded_engine.py``).
+    """
+
+    def __init__(self, query: JoinQuery, rep: str, method: str,
+                 project: Optional[Tuple[str, ...]],
+                 mesh: Mesh, axes: Tuple[str, ...],
+                 stacked: StackedShred,
+                 policy: CapacityPolicy = DEFAULT_POLICY):
+        if method != "exprace":
+            # ptbern_flat needs a static per-shard flat count; shard join
+            # sizes differ, so only the arrival-race sampler shards.
+            raise ValueError(
+                f"sharded sampling supports method='exprace', got {method!r}")
+        self.query = query
+        self.rep = "usr" if rep == "both" else rep
+        self.method = method
+        self.project = tuple(project) if project else None
+        self.mesh = mesh
+        self.axes = tuple(axes)
+        self.stacked = stacked
+        self.num_shards = stacked.num_shards
+        self.policy = policy
+        self.join_sizes = stacked.join_sizes
+        # Global flat offset of each shard's position space: shard flattens
+        # concatenate to the global flatten, so shard-local position + base
+        # is the same coordinate the single-device plan reports.
+        self._bases = np.concatenate(
+            [[0], np.cumsum(self.join_sizes)])[:-1].astype(np.int64)
+
+        w, p = stacked.w, stacked.p
+        if p is not None:
+            means = np.asarray(jax.vmap(estimate.expected_sample_size)(w, p))
+            stds = np.asarray(jax.vmap(estimate.sample_std)(w, p))
+            # One static capacity for every shard: plan for the heaviest.
+            self.cap = policy.plan(float(means.max(initial=0.0)),
+                                   float(stds.max(initial=1.0)))
+            mass = float(np.asarray(
+                jax.vmap(estimate.exprace_arrival_mass)(w, p)).max(initial=0.0))
+            self.acap = policy.plan(mass * 1.1 + 8, mass ** 0.5)
+        else:
+            self.cap = None
+            self.acap = 0
+        self.flat_cap = policy.flatten_capacity(max(self.join_sizes, default=0))
+        self._samplers: Dict[Tuple[int, int], callable] = {}
+        self._flattener = None
+
+    # -- derived -------------------------------------------------------------
+    @property
+    def join_size(self) -> int:
+        return self.stacked.join_size
+
+    def expected_k(self) -> float:
+        if self.stacked.p is None:
+            raise ValueError("plan has no prob_var")
+        return float(estimate.expected_sample_size(
+            self.stacked.w.reshape(-1), self.stacked.p.reshape(-1)))
+
+    # -- shard_map executors -------------------------------------------------
+    @staticmethod
+    def _local_sample(shred, w, p, prefE, key, *, cap, acap, rep, method,
+                      project, axes):
+        key = fold_shard_key(key, axes)
+        # Drop the leading (stacked) singleton shard dim.
+        shred, w, p, prefE = jax.tree.map(lambda x: x[0], (shred, w, p, prefE))
+        s = executors._sample_jit(shred, w, p, prefE, key, cap=cap, rep=rep,
+                                  method=method, acap=acap, project=project)
+        total = jax.lax.psum(s.count, axes)
+        # Re-add the shard dim so out_specs can concatenate across shards.
+        return jax.tree.map(lambda x: x[None], s), total
+
+    @staticmethod
+    def _local_flatten(shred, prefE, *, cap, rep):
+        shred, prefE = jax.tree.map(lambda x: x[0], (shred, prefE))
+        n = prefE[-1]  # this shard's true join size (pads are weight-0)
+        pos = jnp.minimum(jnp.arange(cap, dtype=I64), jnp.maximum(n - 1, 0))
+        cols = probe.get(shred, pos, rep=rep)
+        return jax.tree.map(lambda x: x[None], cols), n[None]
+
+    def _sampler(self, cap: int, acap: int):
+        fn = self._samplers.get((cap, acap))
+        if fn is None:
+            spec = P(self.axes)
+            fn = jax.jit(shard_map(
+                partial(self._local_sample, cap=cap, acap=acap, rep=self.rep,
+                        method=self.method, project=self.project,
+                        axes=self.axes),
+                mesh=self.mesh,
+                in_specs=(spec, spec, spec, spec, P()),
+                out_specs=(spec, P()),
+                check_vma=False,
+            ))
+            self._samplers[(cap, acap)] = fn
+        return fn
+
+    def _flatten_fn(self):
+        if self._flattener is None:
+            spec = P(self.axes)
+            self._flattener = jax.jit(shard_map(
+                partial(self._local_flatten, cap=self.flat_cap, rep=self.rep),
+                mesh=self.mesh,
+                in_specs=(spec, spec),
+                out_specs=(spec, spec),
+                check_vma=False,
+            ))
+        return self._flattener
+
+    # -- execution -----------------------------------------------------------
+    def sample_step(self, key, cap: Optional[int] = None,
+                    acap: Optional[int] = None):
+        """One independent global Poisson sample, left on device: the
+        sharded JoinSample (leading dim = shards, shard-local positions)
+        and the psum'd global count."""
+        if self.stacked.p is None:
+            raise ValueError("plan has no prob_var; use full_join")
+        st = self.stacked
+        return self._sampler(cap or self.cap, acap or self.acap)(
+            st.shred, st.w, st.p, st.prefE, key)
+
+    def sample(self, key, cap: Optional[int] = None,
+               acap: Optional[int] = None) -> JoinSample:
+        """One independent Poisson sample, gathered to a flat JoinSample.
+
+        Positions are rebased to *global* flat coordinates (shard base +
+        local), so the result is drop-in comparable with the single-device
+        plan's samples; ``count`` reflects the gathered tuples (on overflow
+        the draw is invalid and flagged, exactly like the unsharded path).
+        """
+        if self.stacked.p is None:
+            raise ValueError("plan has no prob_var; use full_join")
+        if self.join_size == 0:
+            return executors.empty_sample(self.stacked.shred,
+                                          cap or self.cap)
+        smp, _total = self.sample_step(key, cap=cap, acap=acap)
+        lane_cap = smp.positions.shape[1]
+        counts = np.minimum(np.asarray(smp.count), lane_cap)
+        rows = np.repeat(np.arange(self.num_shards), counts)
+        lanes = np.concatenate(
+            [np.arange(c) for c in counts]) if rows.size else \
+            np.zeros((0,), np.int64)
+        out_cap = lane_cap * self.num_shards
+        cols = {}
+        for v, arr in smp.columns.items():
+            a = np.asarray(arr)
+            buf = np.zeros((out_cap,), a.dtype)
+            buf[:rows.size] = a[rows, lanes]
+            cols[v] = jnp.asarray(buf)
+        posbuf = np.zeros((out_cap,), np.int64)
+        posbuf[:rows.size] = (np.asarray(smp.positions)[rows, lanes]
+                              + self._bases[rows])
+        return JoinSample(
+            cols, jnp.asarray(posbuf),
+            jnp.asarray(np.int64(rows.size)),
+            jnp.asarray(bool(np.asarray(smp.overflow).any())),
+        )
+
+    def sample_auto(self, key, max_doublings: Optional[int] = None,
+                    cap: Optional[int] = None,
+                    acap: Optional[int] = None) -> JoinSample:
+        """Redraw with doubled per-shard capacity until no shard overflows."""
+        return redraw_with_doubling(
+            lambda c, a: self.sample(key, cap=c, acap=a),
+            cap or self.cap, acap or self.acap,
+            max_doublings if max_doublings is not None
+            else self.policy.max_doublings)
+
+    def full_join(self) -> Dict[str, jnp.ndarray]:
+        """Yannakakis via the stacked index: per-shard flatten, gathered.
+
+        Shard s's flatten is the global flatten restricted to root block s,
+        so concatenating the valid prefixes reproduces the single-device
+        ``flatten`` bit-for-bit, order included.
+        """
+        if self.join_size == 0:
+            return {v: node.data.column(v)[0, :0]
+                    for node in self.stacked.shred.root.nodes()
+                    for v in node.owned}
+        st = self.stacked
+        cols, _ns = self._flatten_fn()(st.shred, st.prefE)
+        out = {}
+        for v, arr in cols.items():
+            a = np.asarray(arr)
+            out[v] = jnp.asarray(np.concatenate(
+                [a[s, :self.join_sizes[s]] for s in range(self.num_shards)]))
+        return out
+
+    # -- dry-run support -----------------------------------------------------
+    def lower_step(self):
+        st = self.stacked
+        key = jax.ShapeDtypeStruct((), jax.random.key(0).dtype)
+        args = jax.eval_shape(lambda: (st.shred, st.w, st.p, st.prefE))
+        return self._sampler(self.cap, self.acap).lower(*args, key)

@@ -12,7 +12,7 @@ Tiling: queries are tiled (BQ_ROWS, 128) into VMEM; the prefix table is kept
 wholly VMEM-resident (BlockSpec index_map pinned to block 0). A 16 MiB v5e
 VMEM comfortably holds 2^21 int32 prefix entries + tiles; the ops.py wrapper
 falls back to XLA searchsorted above that (and for int64 offsets — TPU has
-no native int64 gathers; joins > 2^31 use the fallback, see DESIGN.md §8).
+no native int64 gathers; joins > 2^31 use the fallback, see DESIGN.md §9).
 """
 from __future__ import annotations
 

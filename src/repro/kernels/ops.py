@@ -3,7 +3,7 @@
 Each wrapper owns layout plumbing (1-D <-> (rows, 128) retiling, padding)
 and the documented fallbacks:
   * int64 offsets (joins > 2^31) fall back to XLA searchsorted/cumsum —
-    TPU has no native 64-bit gathers (DESIGN.md §8);
+    TPU has no native 64-bit gathers (DESIGN.md §9);
   * prefix tables too large for VMEM fall back likewise.
 ``interpret=True`` everywhere in this container (CPU); on real TPUs the flag
 flips to False via the REPRO_PALLAS_INTERPRET env var.

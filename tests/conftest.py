@@ -5,8 +5,11 @@ join offsets) and enables it on import anyway; forcing it here makes test
 ordering irrelevant. Model code is dtype-explicit and unaffected.
 
 NOTE: XLA_FLAGS --xla_force_host_platform_device_count is deliberately NOT
-set here — smoke tests and benches must see the real single device; only
-launch/dryrun.py (and explicit subprocess tests) force 512/4 devices.
+set here — smoke tests and benches must see the real device count. The CI
+test matrix has an 8-virtual-device leg that sets it process-wide so the
+shard_map paths (sharded engine, pipeline, distributed core) run on a real
+multi-device mesh; subprocess tests pin their own counts either way, and
+launch/dryrun.py forces 512.
 """
 import jax
 
