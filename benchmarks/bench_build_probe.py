@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import build_shred, get
-from .timing import row, time_fn
+from .timing import row, time_fn, tiny
 from .workloads import degree_sweep_workload
 
 OUT_SIZE = 1 << 16
@@ -22,8 +22,10 @@ K = 2048  # probes per GET
 
 
 def run(out):
-    for d in DEGREES:
-        db, q = degree_sweep_workload(0, OUT_SIZE, d)
+    out_size = (1 << 12) if tiny() else OUT_SIZE
+    degrees = (1, 16, 256) if tiny() else DEGREES
+    for d in degrees:
+        db, q = degree_sweep_workload(0, out_size, d)
         shred = build_shred(db, q, rep="both")
         n = int(shred.join_size)
         pos = jax.random.randint(jax.random.key(1), (K,), 0, n).astype(jnp.int64)

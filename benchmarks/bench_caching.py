@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.core import build_shred
 from repro.core.probe import csr_get_rows, csr_get_rows_cached, usr_get_rows
-from .timing import row, time_fn
+from .timing import row, time_fn, tiny
 from .workloads import degree_sweep_workload
 
 OUT_SIZE = 1 << 14
@@ -24,16 +24,18 @@ K = 1024
 
 
 def run(out):
-    for d in (4, 64, 512):
-        db, q = degree_sweep_workload(0, OUT_SIZE, d)
+    out_size = (1 << 11) if tiny() else OUT_SIZE
+    k = 128 if tiny() else K
+    for d in ((4, 64) if tiny() else (4, 64, 512)):
+        db, q = degree_sweep_workload(0, out_size, d)
         shred = build_shred(db, q, rep="both")
         n = int(shred.join_size)
-        pos = jnp.sort(jax.random.randint(jax.random.key(1), (K,), 0, n)
+        pos = jnp.sort(jax.random.randint(jax.random.key(1), (k,), 0, n)
                        .astype(jnp.int64))
         us_plain = time_fn(jax.jit(lambda p: csr_get_rows(shred, p)), pos, reps=3)
         us_cache = time_fn(jax.jit(lambda p: csr_get_rows_cached(shred, p)), pos, reps=3)
         us_usr = time_fn(jax.jit(lambda p: usr_get_rows(shred, p)), pos, reps=3)
-        out(row(f"table6/csr-vmap/d={d}", us_plain, f"k={K}"))
+        out(row(f"table6/csr-vmap/d={d}", us_plain, f"k={k}"))
         out(row(f"table6/csr-cached/d={d}", us_cache,
                 f"cached/vmap={us_cache/us_plain:.2f}x"))
         out(row(f"table6/usr/d={d}", us_usr))

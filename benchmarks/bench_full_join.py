@@ -14,15 +14,16 @@ index — the serving-path cost once the plan cache is hot (DESIGN.md §7).
 """
 from __future__ import annotations
 
-from .timing import row, time_fn
+from .timing import row, time_fn, tiny
 from .workloads import job_like, stats_like
 from repro.core import yannakakis
 from repro.engine import QueryEngine
 
 
 def run(out):
-    for name, (db, q) in (("job_like", job_like(scale=1200)),
-                          ("stats_like", stats_like(scale=1500))):
+    s1, s2 = (120, 150) if tiny() else (1200, 1500)
+    for name, (db, q) in (("job_like", job_like(scale=s1)),
+                          ("stats_like", stats_like(scale=s2))):
         us_u = time_fn(lambda: QueryEngine(db, rep="usr").full_join(q), reps=3)
         us_c = time_fn(lambda: QueryEngine(db, rep="csr").full_join(q), reps=3)
         us_b = time_fn(lambda: yannakakis.binary_join(db, q), reps=3)

@@ -14,12 +14,12 @@ from __future__ import annotations
 import jax
 
 from repro.engine import QueryEngine
-from .timing import row, time_fn
+from .timing import row, time_fn, tiny
 from .workloads import PROB_DISTS, job_like, stats_like
 
 
 def _suite(name, mk, out):
-    for dist in ("low", "medium", "high"):
+    for dist in (("low", "high") if tiny() else ("low", "medium", "high")):
         db, q = mk(dist=dist)
         engine = QueryEngine(db, rep="usr")
         plan_race = engine.compile(q, rep="usr", method="exprace")
@@ -42,5 +42,6 @@ def _suite(name, mk, out):
 
 
 def run(out):
-    _suite("job_like", lambda dist: job_like(dist=dist, scale=1200), out)
-    _suite("stats_like", lambda dist: stats_like(dist=dist, scale=1500), out)
+    s1, s2 = (120, 150) if tiny() else (1200, 1500)
+    _suite("job_like", lambda dist: job_like(dist=dist, scale=s1), out)
+    _suite("stats_like", lambda dist: stats_like(dist=dist, scale=s2), out)

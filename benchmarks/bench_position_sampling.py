@@ -14,21 +14,23 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import sampling
-from .timing import row, time_fn
+from .timing import row, time_fn, tiny
 
 N = 200_000
 PS = (0.0001, 0.001, 0.01, 0.1, 0.3, 0.5, 0.7, 0.9)
 
 
 def run(out):
-    for p in PS:
-        cap = int(min(max(N * p * 1.3 + 6 * (N * p) ** 0.5 + 256, 512), N + 1))
+    n = 10_000 if tiny() else N
+    ps = (0.001, 0.1, 0.9) if tiny() else PS
+    for p in ps:
+        cap = int(min(max(n * p * 1.3 + 6 * (n * p) ** 0.5 + 256, 512), n + 1))
         fns = {
-            "bern": jax.jit(partial(sampling.bern_positions, n=N, cap=cap)),
-            "geo": jax.jit(partial(sampling.geo_positions, n=N, cap=cap)),
-            "binom": jax.jit(partial(sampling.binom_positions, n=N, cap=cap)),
-            "hybrid": jax.jit(partial(sampling.hybrid_positions, n=N, cap=cap)),
+            "bern": jax.jit(partial(sampling.bern_positions, n=n, cap=cap)),
+            "geo": jax.jit(partial(sampling.geo_positions, n=n, cap=cap)),
+            "binom": jax.jit(partial(sampling.binom_positions, n=n, cap=cap)),
+            "hybrid": jax.jit(partial(sampling.hybrid_positions, n=n, cap=cap)),
         }
         for name, fn in fns.items():
             us = time_fn(lambda k: fn(k, jnp.float64(p)), jax.random.key(0))
-            out(row(f"fig7/{name}/p={p}", us, f"n={N};cap={cap}"))
+            out(row(f"fig7/{name}/p={p}", us, f"n={n};cap={cap}"))

@@ -11,14 +11,14 @@ from __future__ import annotations
 import jax
 
 from repro.core import PoissonSampler, yannakakis
-from .timing import row, time_fn
+from .timing import row, time_fn, tiny
 from .workloads import qc_workload
 
 POPS = (500, 1000, 2000, 4000)
 
 
 def run(out):
-    for pop in POPS:
+    for pop in ((200, 400) if tiny() else POPS):
         db, q = qc_workload(n_persons=pop, n_pools=max(pop // 40, 4))
         s = PoissonSampler(db, q, rep="usr", method="exprace")
         n, ek = s.join_size, s.expected_k()

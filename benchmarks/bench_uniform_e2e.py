@@ -13,10 +13,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import PoissonSampler, build_shred, yannakakis
-from .timing import row, time_fn
+from .timing import row, time_fn, tiny
 from .workloads import job_like, stats_like
 
 PS = (0.0001, 0.01, 0.1, 0.5, 0.9)
+
+
+def _ps():
+    return (0.01, 0.5) if tiny() else PS
 
 
 def _bench_suite(name, db, q, out):
@@ -30,7 +34,7 @@ def _bench_suite(name, db, q, out):
     us = time_fn(lambda: build_shred(db, q, rep="csr"), reps=3)
     out(row(f"fig8/{name}/build/csr", us, f"|Q(db)|={n}"))
 
-    for p in PS:
+    for p in _ps():
         method = "geo" if p <= 0.5 else "bern"
         cap = int(min(max(n * p * 1.3 + 6 * (n * p) ** 0.5 + 256, 512), n + 1))
         for repname, s in (("usr", sampler_u), ("csr", sampler_c)):
@@ -44,7 +48,8 @@ def _bench_suite(name, db, q, out):
 
 
 def run(out):
-    db, q = job_like(scale=1500)
+    s1, s2 = (150, 200) if tiny() else (1500, 2000)
+    db, q = job_like(scale=s1)
     _bench_suite("job_like", db, q, out)
-    db, q = stats_like(scale=2000)
+    db, q = stats_like(scale=s2)
     _bench_suite("stats_like", db, q, out)

@@ -30,7 +30,7 @@ def main() -> None:
     from . import (bench_position_sampling, bench_uniform_e2e, bench_poisson,
                    bench_build_probe, bench_full_join, bench_qc,
                    bench_caching, bench_engine_cache, bench_sharded_engine,
-                   bench_kernels, roofline)
+                   bench_throughput, bench_kernels, roofline)
     suites = [
         ("fig7_position_sampling", bench_position_sampling.run),
         ("fig8_uniform_e2e", bench_uniform_e2e.run),
@@ -41,6 +41,7 @@ def main() -> None:
         ("table6_caching", bench_caching.run),
         ("engine_cache", bench_engine_cache.run),
         ("sharded_engine", bench_sharded_engine.run),
+        ("throughput", bench_throughput.run),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]

@@ -9,7 +9,13 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["shard_map", "axis_size"]
+__all__ = ["shard_map", "axis_size", "OLDEST_SUPPORTED_JAX"]
+
+# The oldest jax release the shims below are exercised against — the
+# pinned container toolchain. CI's test matrix runs one leg on exactly
+# this version (and one on latest) so shim drift is caught before users
+# hit it; bump this in lockstep with the container image.
+OLDEST_SUPPORTED_JAX = "0.4.37"
 
 
 def axis_size(name):

@@ -32,7 +32,13 @@ __all__ = ["JoinSample", "PoissonSampler"]
 @dataclasses.dataclass
 class JoinSample:
     """A Poisson sample of the join result. Fixed capacity; lanes >= count
-    are padding (mask with .valid())."""
+    are padding (mask with .valid()).
+
+    Batched draws (``sample_batch``, DESIGN.md §10) reuse this container
+    with a leading batch axis on every leaf: columns/positions ``(B, cap)``,
+    count/overflow ``(B,)``. ``capacity``/``valid`` are batch-aware (the
+    capacity is always the *last* axis; ``valid()`` broadcasts the per-draw
+    counts), so masking code works unchanged on either layout."""
 
     columns: Dict[str, jnp.ndarray]
     positions: jnp.ndarray  # (cap,) flat offsets into the virtual join
@@ -55,10 +61,18 @@ class JoinSample:
 
     @property
     def capacity(self) -> int:
-        return self.positions.shape[0]
+        return self.positions.shape[-1]
+
+    @property
+    def batch(self) -> Optional[int]:
+        """Leading batch size for batched samples, else None."""
+        return self.positions.shape[0] if self.positions.ndim == 2 else None
 
     def valid(self) -> jnp.ndarray:
-        return jnp.arange(self.capacity) < self.count
+        count = jnp.asarray(self.count)
+        if count.ndim:
+            count = count[..., None]
+        return jnp.arange(self.capacity) < count
 
 
 class PoissonSampler:

@@ -8,6 +8,21 @@ overflow the caller re-draws with a larger capacity (poisson.py). Positions
 use int64 (join sizes reach 1e10 in the paper's EpiQL workload) — core
 enables jax x64 on import (see core/__init__.py).
 
+Vmap-safety contract (DESIGN.md §10): ``exprace_positions`` and
+``pt_bern_flat_positions`` draw randomness *only* from their PRNG key and
+are built entirely from per-lane-deterministic primitives (elementwise
+math, sort, cumsum, searchsorted, scatter-with-drop) — no host callbacks,
+no data-dependent shapes, no cross-lane reductions. ``jax.vmap`` over the
+key argument (weights/probabilities/prefixes broadcast) therefore yields,
+lane for lane, the *bit-identical* sample a standalone call under that key
+produces. The engine's batched multi-draw executor
+(``engine/executors.batched_sample_executor``) and the sharded batched
+path rely on this; ``tests/test_batched_engine.py`` asserts it for both
+methods, both representations, and under a device mesh. Keep new sampler
+code inside this envelope (in particular: no ``jax.lax.cond`` whose
+branches have key-dependent side conditions on shapes, no host-side
+``int(...)``/``float(...)`` of traced values).
+
 EXPRACE (beyond paper, DESIGN.md §3) — exact non-uniform Poisson sampling as
 a *thinned Poisson process*, with no sequential per-root loop:
 
@@ -154,7 +169,8 @@ def exprace_positions(
 ) -> PositionSample:
     """EXPRACE: exact non-uniform Poisson sample positions via a thinned
     Poisson process (module docstring). Fully vectorized, exact for all
-    p in [0, 1].
+    p in [0, 1]. Vmap-safe over ``key`` (module docstring contract): the
+    engine's batched executor maps this function over split keys.
 
     w:     (R,) int64   flatten weight of each root tuple (0 = dangling)
     p:     (R,) float   sampling probability of each root tuple (t[y])
@@ -229,7 +245,8 @@ def exprace_positions(
 
 def pt_bern_flat_positions(key, root_p, prefE, n: int, cap: int) -> PositionSample:
     """Faithful PTBERN, flattened: one Bernoulli trial per flat position with
-    that position's root probability. Theta(n) — only for materializable n."""
+    that position's root probability. Theta(n) — only for materializable n.
+    Vmap-safe over ``key`` (module docstring contract)."""
     flat = jnp.arange(n, dtype=I64)
     r = jnp.clip(jnp.searchsorted(prefE, flat, side="right") - 1, 0, root_p.shape[0] - 1)
     u = jax.random.uniform(key, (n,), F64)

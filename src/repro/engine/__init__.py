@@ -10,10 +10,14 @@ the paper derives from the shredded random-access index, from one build:
     n      = engine.join_size(query)              # |Q(db)|, O(1)
     print(engine.explain(query))
 
-Sharded execution is the same API over a device mesh (DESIGN.md §8):
+Sharded execution is the same API over a device mesh (DESIGN.md §8), and
+batched multi-draw execution is the same API over a key vector
+(DESIGN.md §10) — the two compose:
 
     smp  = engine.sample(query, key, mesh=mesh)   # N-device Poisson trials
     full = engine.full_join(query, mesh=mesh)     # N-device flatten, gathered
+    bat  = engine.sample_batch(query, jax.random.split(key, 64))
+    bat  = engine.sample_batch(query, keys, mesh=mesh)  # shard_map ∘ vmap
 
 Public API:
     QueryEngine       plan/cache/dispatch over one database

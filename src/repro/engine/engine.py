@@ -270,6 +270,38 @@ class QueryEngine:
     # (including ``mesh=``) are identical.
     sample = poisson_sample
 
+    def sample_batch(self, query: JoinQuery, keys, *,
+                     cap: Optional[int] = None, acap: Optional[int] = None,
+                     rep: Optional[str] = None, method: str = "exprace",
+                     project: Optional[tuple] = None, mesh=None,
+                     axes: Optional[tuple] = None) -> JoinSample:
+        """``B`` independent Poisson draws of ``beta_y(Q)`` in one dispatch
+        (DESIGN.md §10). ``keys`` is a ``(B,)`` PRNG key vector — pass
+        ``jax.random.split(key, B)`` for the canonical stream. The result's
+        leaves carry a leading batch axis (columns/positions ``(B, cap)``,
+        count/overflow ``(B,)``) and lane ``b`` is bit-identical to
+        ``sample(query, keys[b])`` with the same kwargs.
+
+        The plan is the *same* cache entry the single-draw path uses (one
+        fingerprint, one shred, one ``CompiledPlan``), so interleaving
+        single and batched draws rebuilds nothing; batch sizes are bucketed
+        to powers of two, so warm same-bucket batches never retrace. With
+        ``mesh=``, the sharded plan composes: shard_map outside, vmap
+        inside, one psum for the ``(B,)`` global counts.
+        """
+        if query.prob_var is None:
+            raise ValueError("Poisson sampling needs query.prob_var (beta_y)")
+        if mesh is not None:
+            plan = self.compile_sharded(query, mesh, axes=axes, rep=rep,
+                                        method=method, project=project)
+            if isinstance(plan, ShardedPlan):
+                return plan.sample_batch(keys, cap=cap, acap=acap)
+            # degenerate mesh: fall through to the single-device plan
+        else:
+            plan = self.compile(query, rep=rep, method=method, project=project)
+        return plan.sample_batch(keys, cap=cap, acap=acap,
+                                 rep=rep if rep != "both" else None)
+
     def uniform_sample(self, query: JoinQuery, key, p: float, *,
                        cap: Optional[int] = None, method: str = "hybrid",
                        rep: Optional[str] = None) -> JoinSample:

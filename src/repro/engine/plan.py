@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import estimate, probe
@@ -69,6 +70,8 @@ class CompiledPlan:
         else:
             self.p = None
         self._jit = executors.sample_executor(self.method, self.project)
+        self._batched_jit = executors.batched_sample_executor(
+            self.method, self.project)
 
     # -- capacity planning ---------------------------------------------------
     @property
@@ -97,6 +100,35 @@ class CompiledPlan:
         n = self.join_size if self.method == "ptbern_flat" else 0
         return self._jit(self.shred, self.w, self.p, self.prefE, key, cap=cap,
                          rep=rep or self.rep_default, n=n, acap=acap)
+
+    def sample_batch(self, keys, cap: Optional[int] = None,
+                     rep: Optional[str] = None,
+                     acap: Optional[int] = None) -> JoinSample:
+        """``B`` independent Poisson draws in one dispatch (DESIGN.md §10).
+
+        ``keys`` is a ``(B,)`` PRNG key vector (e.g. ``jax.random.split``);
+        the result is a ``JoinSample`` whose leaves carry a leading batch
+        axis — columns/positions ``(B, cap)``, count/overflow ``(B,)`` —
+        and lane ``b`` is bit-identical to ``self.sample(keys[b])``. The
+        key vector is padded to its power-of-two bucket before the
+        dispatch, so warm batches of any size within a bucket never
+        retrace; padding lanes are sliced off the result.
+        """
+        if self.p is None:
+            raise ValueError("plan has no prob_var; use uniform_sample/full_join")
+        batch = int(keys.shape[0])
+        cap = cap or self.default_capacity()
+        if self.join_size == 0:
+            return executors.empty_sample_batch(self.shred, cap, batch)
+        acap = acap or (self.arrival_capacity() if self.method == "exprace" else 0)
+        n = self.join_size if self.method == "ptbern_flat" else 0
+        kpad, _ = executors.pad_batch_keys(keys)
+        smp = self._batched_jit(self.shred, self.w, self.p, self.prefE, kpad,
+                                cap=cap, rep=rep or self.rep_default, n=n,
+                                acap=acap)
+        if int(kpad.shape[0]) != batch:
+            smp = jax.tree.map(lambda x: x[:batch], smp)
+        return smp
 
     def sample_auto(self, key, max_doublings: Optional[int] = None,
                     cap: Optional[int] = None,

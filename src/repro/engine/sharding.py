@@ -145,6 +145,7 @@ class ShardedPlan:
             self.acap = 0
         self.flat_cap = policy.flatten_capacity(max(self.join_sizes, default=0))
         self._samplers: Dict[Tuple[int, int], callable] = {}
+        self._batched_samplers: Dict[Tuple[int, int], callable] = {}
         self._flattener = None
 
     # -- derived -------------------------------------------------------------
@@ -172,6 +173,24 @@ class ShardedPlan:
         return jax.tree.map(lambda x: x[None], s), total
 
     @staticmethod
+    def _local_sample_batch(shred, w, p, prefE, keys, *, cap, acap, rep,
+                            method, project, axes):
+        """The batched shard body (DESIGN.md §10): shard_map outside, vmap
+        inside. Each lane folds the same shard coordinate into its own base
+        key, so lane ``b`` reproduces the single-draw sharded path under
+        ``keys[b]`` bit-for-bit; one psum reports the (B,) global counts."""
+        shred, w, p, prefE = jax.tree.map(lambda x: x[0], (shred, w, p, prefE))
+
+        def one(k):
+            return executors._sample_jit(
+                shred, w, p, prefE, fold_shard_key(k, axes), cap=cap,
+                rep=rep, method=method, acap=acap, project=project)
+
+        s = jax.vmap(one)(keys)              # leaves: (B, ...)
+        totals = jax.lax.psum(s.count, axes)  # (B,) global counts
+        return jax.tree.map(lambda x: x[None], s), totals
+
+    @staticmethod
     def _local_flatten(shred, prefE, *, cap, rep):
         shred, prefE = jax.tree.map(lambda x: x[0], (shred, prefE))
         n = prefE[-1]  # this shard's true join size (pads are weight-0)
@@ -193,6 +212,22 @@ class ShardedPlan:
                 check_vma=False,
             ))
             self._samplers[(cap, acap)] = fn
+        return fn
+
+    def _batched_sampler(self, cap: int, acap: int):
+        fn = self._batched_samplers.get((cap, acap))
+        if fn is None:
+            spec = P(self.axes)
+            fn = jax.jit(shard_map(
+                partial(self._local_sample_batch, cap=cap, acap=acap,
+                        rep=self.rep, method=self.method,
+                        project=self.project, axes=self.axes),
+                mesh=self.mesh,
+                in_specs=(spec, spec, spec, spec, P()),
+                out_specs=(spec, P()),
+                check_vma=False,
+            ))
+            self._batched_samplers[(cap, acap)] = fn
         return fn
 
     def _flatten_fn(self):
@@ -234,27 +269,66 @@ class ShardedPlan:
             return executors.empty_sample(self.stacked.shred,
                                           cap or self.cap)
         smp, _total = self.sample_step(key, cap=cap, acap=acap)
-        lane_cap = smp.positions.shape[1]
-        counts = np.minimum(np.asarray(smp.count), lane_cap)
+        return self._gather(
+            {v: np.asarray(a) for v, a in smp.columns.items()},
+            np.asarray(smp.positions), np.asarray(smp.count),
+            bool(np.asarray(smp.overflow).any()))
+
+    def _gather(self, columns, positions, counts, overflow) -> JoinSample:
+        """Compact one draw's per-shard (S, cap) buffers into a flat
+        JoinSample, rebasing positions to global flat coordinates (shard
+        base + local). Shared by the single-draw and batched paths, so
+        their per-draw results are bit-identical."""
+        lane_cap = positions.shape[1]
+        counts = np.minimum(counts, lane_cap)
         rows = np.repeat(np.arange(self.num_shards), counts)
         lanes = np.concatenate(
             [np.arange(c) for c in counts]) if rows.size else \
             np.zeros((0,), np.int64)
         out_cap = lane_cap * self.num_shards
         cols = {}
-        for v, arr in smp.columns.items():
-            a = np.asarray(arr)
+        for v, a in columns.items():
             buf = np.zeros((out_cap,), a.dtype)
             buf[:rows.size] = a[rows, lanes]
             cols[v] = jnp.asarray(buf)
         posbuf = np.zeros((out_cap,), np.int64)
-        posbuf[:rows.size] = (np.asarray(smp.positions)[rows, lanes]
-                              + self._bases[rows])
+        posbuf[:rows.size] = positions[rows, lanes] + self._bases[rows]
         return JoinSample(
             cols, jnp.asarray(posbuf),
             jnp.asarray(np.int64(rows.size)),
-            jnp.asarray(bool(np.asarray(smp.overflow).any())),
+            jnp.asarray(bool(overflow)),
         )
+
+    def sample_batch(self, keys, cap: Optional[int] = None,
+                     acap: Optional[int] = None) -> JoinSample:
+        """``B`` independent global Poisson draws in one shard_map dispatch
+        (DESIGN.md §10): vmap over split keys inside each shard, one psum
+        for the global counts. The gathered result carries a leading batch
+        axis and lane ``b`` is bit-identical to ``self.sample(keys[b])``
+        (same per-shard draws, same gather). Keys are bucketed to powers of
+        two exactly like the single-device batched path.
+        """
+        if self.stacked.p is None:
+            raise ValueError("plan has no prob_var; use full_join")
+        batch = int(keys.shape[0])
+        if self.join_size == 0:
+            return executors.empty_sample_batch(self.stacked.shred,
+                                                cap or self.cap, batch)
+        kpad, _ = executors.pad_batch_keys(keys)
+        st = self.stacked
+        smp, _totals = self._batched_sampler(cap or self.cap,
+                                             acap or self.acap)(
+            st.shred, st.w, st.p, st.prefE, kpad)
+        # Host gather per lane (padding lanes never gathered), then stack.
+        columns = {v: np.asarray(a) for v, a in smp.columns.items()}
+        positions = np.asarray(smp.positions)   # (S, Bp, cap)
+        counts = np.asarray(smp.count)          # (S, Bp)
+        overflow = np.asarray(smp.overflow)     # (S, Bp)
+        lanes = [self._gather({v: a[:, b] for v, a in columns.items()},
+                              positions[:, b], counts[:, b],
+                              overflow[:, b].any())
+                 for b in range(batch)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *lanes)
 
     def sample_auto(self, key, max_doublings: Optional[int] = None,
                     cap: Optional[int] = None,

@@ -1,9 +1,12 @@
 """Serving drivers: (1) LM batched prefill + decode with a request queue
 (continuous-batching-lite) on the reduced configs, and (2) a join-sampling
-service built on ``repro.engine.QueryEngine`` — the multi-tenant pattern
-where many concurrent requests (possibly over the same handful of query
-shapes) share one compiled-plan cache, so only the first request of each
-shape pays GYO + index build + XLA trace (DESIGN.md §7).
+service built on ``repro.engine.QueryEngine`` — a micro-batching request
+loop (DESIGN.md §10) over the multi-tenant pattern where many concurrent
+requests (possibly over the same handful of query shapes) share one
+compiled-plan cache, so only the first request of each shape pays GYO +
+index build + XLA trace (DESIGN.md §7). Requests accumulate up to
+``--max-batch`` or ``--max-wait-ms`` and flush as ONE ``sample_batch``
+dispatch per query shape; the loop reports p50/p99 latency and draws/sec.
 
 The decode step function is the same one the dry-run lowers for the
 decode_32k / long_500k cells (launch/dryrun.py `make_serve_step`); here it
@@ -14,7 +17,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -70,7 +73,7 @@ def serve_batch(arch: str, requests: List[Request], seed: int = 0,
 
 
 # ---------------------------------------------------------------------------
-# Join-sampling service (engine-backed)
+# Join-sampling service (engine-backed): micro-batching request loop
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
@@ -79,32 +82,117 @@ class JoinSampleRequest:
 
     query: "JoinQuery"
     seed: int = 0
-    count: Optional[int] = None  # filled by the service
-    latency_s: Optional[float] = None
+    count: Optional[int] = None       # filled by the service
+    overflow: Optional[bool] = None   # filled by the service
+    latency_s: Optional[float] = None  # enqueue -> results routed back
+    enqueued_s: Optional[float] = None  # set by MicroBatcher.submit
 
 
-def serve_join_samples(engine, requests: List[JoinSampleRequest], mesh=None
-                       ) -> List[JoinSampleRequest]:
-    """Serve a queue of Poisson-sample requests from one shared engine.
+class MicroBatcher:
+    """Micro-batching front end over ``QueryEngine.sample_batch``
+    (DESIGN.md §10).
 
-    Every request with a previously-seen query fingerprint is a warm hit:
-    no GYO, no index rebuild, no retrace — a dict lookup plus one cached
-    XLA dispatch. With ``mesh``, requests route through the engine's
-    sharded plan (DESIGN.md §8) and the warm path likewise performs zero
-    stacked-index rebuilds. The cold/warm latency gap printed per request
-    is the compiled-plan cache doing its job
-    (benchmarks/bench_engine_cache.py measures it in isolation).
+    Requests accumulate in an arrival-ordered queue and are flushed as
+    batched dispatches when either trigger fires:
+
+      * **size** — the queue reaches ``max_batch`` requests;
+      * **deadline** — the oldest pending request has waited
+        ``max_wait_ms`` (checked by ``poll()``, which the serving loop
+        calls between arrivals).
+
+    A flush groups pending requests by query fingerprint and issues ONE
+    ``sample_batch`` dispatch per distinct shape — mixed-tenant queues
+    share the engine's plan cache (one plan per shape, reused across
+    flushes), and per-request results are routed back by lane index.
+    ``clock`` is injectable so deadline behavior is unit-testable
+    (``tests/test_serve_batcher.py``).
     """
+
+    def __init__(self, engine, *, max_batch: int = 64,
+                 max_wait_ms: float = 2.0, mesh=None, axes=None,
+                 clock=time.perf_counter):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.engine = engine
+        self.max_batch = max_batch
+        self.max_wait_ms = max_wait_ms
+        self.mesh = mesh
+        self.axes = axes
+        self.clock = clock
+        self.pending: List[JoinSampleRequest] = []
+        self.flushes = 0
+        self.dispatches = 0
+        self.served = 0
+
+    def submit(self, req: JoinSampleRequest) -> List[JoinSampleRequest]:
+        """Enqueue one request; returns completed requests (non-empty only
+        when this arrival filled the batch and triggered a flush)."""
+        req.enqueued_s = self.clock()
+        self.pending.append(req)
+        if len(self.pending) >= self.max_batch:
+            return self.flush()
+        return []
+
+    def poll(self) -> List[JoinSampleRequest]:
+        """Deadline check: flush iff the oldest pending request has waited
+        at least ``max_wait_ms``. Call between arrivals / when idle."""
+        if self.pending and \
+                (self.clock() - self.pending[0].enqueued_s) * 1e3 >= self.max_wait_ms:
+            return self.flush()
+        return []
+
+    def flush(self) -> List[JoinSampleRequest]:
+        """Dispatch everything pending now (one batched draw per distinct
+        query fingerprint) and route results back to their requests."""
+        from repro.engine import query_fingerprint
+
+        batch, self.pending = self.pending, []
+        if not batch:
+            return []
+        groups: Dict[str, List[JoinSampleRequest]] = {}
+        for r in batch:
+            groups.setdefault(query_fingerprint(r.query), []).append(r)
+        for reqs in groups.values():
+            keys = jnp.stack([jax.random.key(r.seed) for r in reqs])
+            smp = self.engine.sample_batch(reqs[0].query, keys,
+                                           mesh=self.mesh, axes=self.axes)
+            jax.block_until_ready(smp.count)
+            done_t = self.clock()
+            counts = np.asarray(smp.count)
+            overflow = np.asarray(smp.overflow)
+            for lane, r in enumerate(reqs):
+                r.count = int(counts[lane])
+                r.overflow = bool(overflow[lane])
+                r.latency_s = done_t - r.enqueued_s
+            self.dispatches += 1
+        self.flushes += 1
+        self.served += len(batch)
+        return batch
+
+
+def serve_join_samples(engine, requests: List[JoinSampleRequest], mesh=None,
+                       max_batch: int = 64, max_wait_ms: float = 2.0,
+                       ) -> List[JoinSampleRequest]:
+    """Serve a request list through the micro-batcher (closed loop: submit
+    everything, then drain). Kept as the library entry point the demo and
+    tests share; results are routed back onto the request objects."""
+    mb = MicroBatcher(engine, max_batch=max_batch, max_wait_ms=max_wait_ms,
+                      mesh=mesh)
+    done: List[JoinSampleRequest] = []
     for r in requests:
-        t0 = time.perf_counter()
-        s = engine.sample(r.query, jax.random.key(r.seed), mesh=mesh)
-        jax.block_until_ready(s.positions)
-        r.latency_s = time.perf_counter() - t0
-        r.count = int(s.count)
-    return requests
+        done += mb.submit(r)
+        done += mb.poll()
+    done += mb.flush()  # drain the tail regardless of deadline
+    return done
 
 
-def _join_demo(n_requests: int, devices: int = 1) -> None:
+def _pctl(xs: List[float], q: float) -> float:
+    ys = sorted(xs)
+    return ys[min(len(ys) - 1, int(q * len(ys)))]
+
+
+def _join_demo(n_requests: int, devices: int = 1, max_batch: int = 64,
+               max_wait_ms: float = 2.0) -> None:
     from repro.core import Atom, JoinQuery
     from repro.data.pipeline import make_corpus_db
     from repro.engine import QueryEngine
@@ -116,23 +204,38 @@ def _join_demo(n_requests: int, devices: int = 1) -> None:
         mesh = jax.make_mesh((n,), ("data",))
 
     db = make_corpus_db(n_docs=20_000, n_clusters=64, seq_len=8, vocab=256)
-    q = JoinQuery((Atom.of("ClusterQuality", "clust", "p"),
-                   Atom.of("Doc", "doc", "clust")), prob_var="p")
+    # Two tenant query shapes sharing one plan cache (same db, same engine).
+    q_qual = JoinQuery((Atom.of("ClusterQuality", "clust", "p"),
+                        Atom.of("Doc", "doc", "clust")), prob_var="p")
+    q_flat = JoinQuery((Atom.of("ClusterQuality", "clust", "p"),),
+                       prob_var="p")
     engine = QueryEngine(db)
-    reqs = [JoinSampleRequest(query=q, seed=i) for i in range(n_requests)]
-    done = serve_join_samples(engine, reqs, mesh=mesh)
-    for i, r in enumerate(done):
-        tag = "cold" if i == 0 else "warm"
-        print(f"  req{i} ({tag}): k={r.count} in {r.latency_s*1e3:.1f} ms")
+    mb = MicroBatcher(engine, max_batch=max_batch, max_wait_ms=max_wait_ms,
+                      mesh=mesh)
+    reqs = [JoinSampleRequest(query=q_qual if i % 3 else q_flat, seed=i)
+            for i in range(n_requests)]
+    t0 = time.perf_counter()
+    done: List[JoinSampleRequest] = []
+    for r in reqs:
+        done += mb.submit(r)
+        done += mb.poll()
+    done += mb.flush()
+    wall = time.perf_counter() - t0
+    assert len(done) == n_requests
+    lats = [r.latency_s * 1e3 for r in done]
     st = engine.stats
     shards = ""
     if mesh is not None:  # the planner may degrade to the unsharded plan
         from repro.engine import ShardedPlan
-        plan = engine.compile_sharded(q, mesh)
+        plan = engine.compile_sharded(q_qual, mesh)
         shards = (f"  shards={plan.num_shards}"
                   if isinstance(plan, ShardedPlan) else "  shards=1")
-    print(f"[serve-join] {len(done)} requests{shards}  "
-          f"shred_builds={st.shred_builds} shred_hits={st.shred_hits} "
+    print(f"[serve-join] {n_requests} requests in {mb.flushes} flushes "
+          f"({mb.dispatches} dispatches){shards}  "
+          f"max_batch={max_batch} max_wait={max_wait_ms}ms")
+    print(f"  draws/sec={n_requests/wall:,.0f}  latency p50={_pctl(lats, .5):.1f}ms "
+          f"p99={_pctl(lats, .99):.1f}ms  (incl. cold compile in early flushes)")
+    print(f"  cache: shred_builds={st.shred_builds} shred_hits={st.shred_hits} "
           f"plan_hits={st.plan_hits} plan_misses={st.plan_misses}")
 
 
@@ -145,9 +248,17 @@ def main():
     ap.add_argument("--devices", type=int, default=1,
                     help="join mode: serve through the engine's sharded plan "
                          "on this many (virtual) host devices")
+    ap.add_argument("--requests", type=int, default=256,
+                    help="join mode: number of requests in the demo stream")
+    ap.add_argument("--max-batch", type=int, default=64,
+                    help="join mode: flush when this many requests are queued")
+    ap.add_argument("--max-wait-ms", type=float, default=2.0,
+                    help="join mode: flush when the oldest pending request "
+                         "has waited this long")
     args = ap.parse_args()
     if args.mode == "join":
-        _join_demo(args.batch, devices=args.devices)
+        _join_demo(args.requests, devices=args.devices,
+                   max_batch=args.max_batch, max_wait_ms=args.max_wait_ms)
         return
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=list(rng.integers(1, 200, rng.integers(4, 12))),

@@ -1,0 +1,134 @@
+"""The serve-loop micro-batcher (DESIGN.md §10): flush triggers and
+per-request result routing.
+
+(a) flush-on-max-batch: the arrival that fills the batch triggers the
+    flush; earlier arrivals stay queued;
+(b) flush-on-deadline: ``poll()`` flushes iff the oldest pending request
+    has waited ``max_wait_ms`` (driven by an injected fake clock — no
+    sleeps, no wall-clock flakiness);
+(c) routing: a mixed-shape queue is served as one batched dispatch per
+    query fingerprint, every request gets exactly its own draw (equal to
+    the single-draw engine under the same seed), and the shapes share
+    one engine plan cache across flushes.
+"""
+import numpy as np
+import jax
+import pytest
+
+from repro.core import Atom, Database, JoinQuery
+from repro.engine import QueryEngine
+from repro.launch.serve import (
+    JoinSampleRequest, MicroBatcher, serve_join_samples,
+)
+
+
+@pytest.fixture(scope="module")
+def db():
+    rng = np.random.default_rng(11)
+    return Database.from_columns({
+        "R": {"x": rng.integers(0, 12, 90), "p": rng.random(90) * 0.5},
+        "S": {"x": rng.integers(0, 12, 140), "y": rng.integers(0, 9, 140)},
+        "T": {"y": rng.integers(0, 9, 60), "z": np.arange(60)},
+    })
+
+
+@pytest.fixture(scope="module")
+def q3(db):
+    return JoinQuery((Atom.of("R", "x", "p"), Atom.of("S", "x", "y"),
+                      Atom.of("T", "y", "z")), prob_var="p")
+
+
+@pytest.fixture(scope="module")
+def q2(db):
+    return JoinQuery((Atom.of("R", "x", "p"), Atom.of("S", "x", "y")),
+                     prob_var="p")
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# -- (a) flush on max_batch --------------------------------------------------
+
+def test_flush_on_max_batch(db, q3):
+    clock = FakeClock()
+    mb = MicroBatcher(QueryEngine(db), max_batch=4, max_wait_ms=1e9,
+                      clock=clock)
+    done = []
+    for i in range(3):
+        assert mb.submit(JoinSampleRequest(query=q3, seed=i)) == []
+    assert len(mb.pending) == 3 and mb.flushes == 0
+    done = mb.submit(JoinSampleRequest(query=q3, seed=3))  # fills the batch
+    assert len(done) == 4 and mb.pending == [] and mb.flushes == 1
+    assert all(r.count is not None and r.latency_s is not None for r in done)
+    # next arrival starts a fresh batch
+    assert mb.submit(JoinSampleRequest(query=q3, seed=4)) == []
+    assert len(mb.pending) == 1
+
+
+# -- (b) flush on deadline ---------------------------------------------------
+
+def test_flush_on_deadline(db, q3):
+    clock = FakeClock()
+    mb = MicroBatcher(QueryEngine(db), max_batch=100, max_wait_ms=5.0,
+                      clock=clock)
+    mb.submit(JoinSampleRequest(query=q3, seed=0))
+    clock.t = 0.004  # 4ms < 5ms deadline
+    assert mb.poll() == [] and len(mb.pending) == 1
+    mb.submit(JoinSampleRequest(query=q3, seed=1))  # younger request
+    clock.t = 0.0051  # oldest has now waited past the deadline
+    done = mb.poll()
+    assert len(done) == 2 and mb.pending == []  # deadline drains everything
+    assert mb.flushes == 1
+    # deadline is measured from the OLDEST pending request
+    assert done[0].latency_s == pytest.approx(0.0051)
+    assert mb.poll() == []  # empty queue: poll is a no-op
+
+
+# -- (c) routing: mixed shapes, one plan cache -------------------------------
+
+def test_mixed_shapes_one_dispatch_each_and_exact_routing(db, q3, q2):
+    engine = QueryEngine(db)
+    mb = MicroBatcher(engine, max_batch=8, max_wait_ms=1e9, clock=FakeClock())
+    reqs = [JoinSampleRequest(query=q3 if i % 2 == 0 else q2, seed=10 + i)
+            for i in range(8)]
+    done = []
+    for r in reqs:
+        done += mb.submit(r)
+    assert len(done) == 8 and mb.flushes == 1
+    assert mb.dispatches == 2  # one batched dispatch per query shape
+    # Every request got exactly its own independent draw.
+    ref_engine = QueryEngine(db)
+    for r in reqs:
+        want = ref_engine.sample(r.query, jax.random.key(r.seed))
+        assert r.count == int(want.count), (r.seed, r.count, int(want.count))
+        assert r.overflow == bool(want.overflow)
+    # Both shapes live in ONE shared plan cache: two plans, two shreds.
+    assert engine.stats.plan_misses == 2
+    assert engine.stats.shred_builds == 2
+    # A second mixed flush is fully warm — zero rebuilds, plans hit.
+    st0 = engine.stats.snapshot()
+    for i in range(8):
+        mb.submit(JoinSampleRequest(query=q3 if i % 2 else q2, seed=50 + i))
+    assert mb.flushes == 2
+    assert engine.stats.plan_misses == st0.plan_misses
+    assert engine.stats.shred_builds == st0.shred_builds
+    assert engine.stats.plan_hits >= st0.plan_hits + 2
+
+
+def test_serve_join_samples_drains_everything(db, q3, q2):
+    engine = QueryEngine(db)
+    reqs = [JoinSampleRequest(query=q3 if i % 3 else q2, seed=i)
+            for i in range(11)]
+    done = serve_join_samples(engine, reqs, max_batch=4)
+    assert sorted(id(r) for r in done) == sorted(id(r) for r in reqs)
+    assert all(r.count is not None for r in reqs)
+
+
+def test_max_batch_validation(db):
+    with pytest.raises(ValueError, match="max_batch"):
+        MicroBatcher(QueryEngine(db), max_batch=0)

@@ -1,0 +1,156 @@
+#!/usr/bin/env python
+"""CI perf-regression gate (stdlib-only).
+
+Compares a ``benchmarks.run`` CSV (the bench-smoke job's output) against
+the committed ``BENCH_<suite>.json`` baselines in the repo root. For each
+baselined suite:
+
+  * rows are matched by name between baseline and CSV (``us <= 0`` rows
+    are informational — cache stats, speedup summaries — and skipped);
+  * the gate metric is the MEDIAN of per-row ratios ``csv_us / base_us``
+    (robust to one noisy row, scale-free across row magnitudes);
+  * the gate fails when the median ratio exceeds ``1 + threshold``
+    (default 0.30: a >30% median slowdown), when a baselined suite is
+    missing from the CSV (a silently-dropped suite is itself a
+    regression), or when fewer than half the baseline rows matched.
+
+Baselines are absolute wall times, so they are only comparable on the
+machine class that recorded them — refresh them from the runner class
+that enforces them (README "Benchmark baselines"):
+
+  PYTHONPATH=src python -m benchmarks.run --tiny | tee bench.csv
+  python tools/check_bench.py --csv bench.csv --update throughput
+
+Usage:
+  python tools/check_bench.py --csv bench-smoke.csv               # gate
+  python tools/check_bench.py --csv b.csv --update suite[,suite]  # refresh
+  python tools/check_bench.py --csv b.csv --update-all            # all suites
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+from pathlib import Path
+
+DEFAULT_THRESHOLD = 0.30
+
+
+def parse_csv(path: Path):
+    """CSV -> {suite: {row_name: us}}. Suites come from the ``# --- name
+    ---`` markers ``benchmarks.run`` prints before each suite."""
+    suites, current = {}, None
+    for line in path.read_text().splitlines():
+        line = line.strip()
+        if line.startswith("# ---") and line.endswith("---"):
+            current = line.strip("# -").strip()
+            suites.setdefault(current, {})
+            continue
+        if not line or line.startswith("#") or line.startswith("name,"):
+            continue
+        parts = line.split(",", 2)
+        if len(parts) < 2 or current is None:
+            continue
+        try:
+            us = float(parts[1])
+        except ValueError:
+            continue
+        if us > 0:  # us <= 0 marks informational rows
+            suites[current][parts[0]] = us
+    return suites
+
+
+def load_baselines(root: Path):
+    """{suite: (path, rows)} for every BENCH_*.json in the repo root."""
+    out = {}
+    for f in sorted(root.glob("BENCH_*.json")):
+        data = json.loads(f.read_text())
+        out[data["suite"]] = (f, data["rows"])
+    return out
+
+
+def check(suites, baselines, threshold: float) -> int:
+    if not baselines:
+        print("check_bench: no BENCH_*.json baselines committed; "
+              "nothing to gate", file=sys.stderr)
+        return 0
+    failures = []
+    for suite, (path, base_rows) in baselines.items():
+        if suite not in suites:
+            failures.append(f"{suite}: baselined suite missing from the CSV "
+                            f"(was it dropped from the bench run?)")
+            continue
+        csv_rows = suites[suite]
+        shared = sorted(set(base_rows) & set(csv_rows))
+        if len(shared) * 2 < len(base_rows):
+            failures.append(
+                f"{suite}: only {len(shared)}/{len(base_rows)} baseline rows "
+                f"present in the CSV (renamed rows? refresh {path.name})")
+            continue
+        ratios = [csv_rows[r] / base_rows[r] for r in shared
+                  if base_rows[r] > 0]
+        med = statistics.median(ratios)
+        status = "ok" if med <= 1 + threshold else "REGRESSED"
+        print(f"check_bench: {suite}: median ratio {med:.3f} over "
+              f"{len(ratios)} rows (threshold {1 + threshold:.2f}) {status}")
+        if med > 1 + threshold:
+            worst = sorted(shared, key=lambda r: csv_rows[r] / base_rows[r],
+                           reverse=True)[:5]
+            detail = "; ".join(
+                f"{r} {base_rows[r]:.0f}->{csv_rows[r]:.0f}us" for r in worst)
+            failures.append(f"{suite}: median ratio {med:.3f} > "
+                            f"{1 + threshold:.2f} (worst: {detail})")
+    if failures:
+        print("check_bench: FAILED", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    return 0
+
+
+def update(suites, names, root: Path) -> int:
+    missing = [n for n in names if n not in suites]
+    if missing:
+        print(f"check_bench: --update suites not in the CSV: {missing} "
+              f"(available: {sorted(suites)})", file=sys.stderr)
+        return 2
+    for name in names:
+        path = root / f"BENCH_{name}.json"
+        path.write_text(json.dumps(
+            {"suite": name, "rows": suites[name]}, indent=2, sort_keys=True)
+            + "\n")
+        print(f"check_bench: wrote {path} ({len(suites[name])} rows)")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--csv", required=True, type=Path,
+                    help="benchmarks.run output to gate / take baselines from")
+    ap.add_argument("--baseline-dir", type=Path,
+                    default=Path(__file__).resolve().parents[1],
+                    help="where BENCH_*.json live (default: repo root)")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="allowed fractional median slowdown (default 0.30)")
+    ap.add_argument("--update", default=None,
+                    help="comma-separated suites: write BENCH_<suite>.json "
+                         "from the CSV instead of gating")
+    ap.add_argument("--update-all", action="store_true",
+                    help="write baselines for every suite in the CSV")
+    args = ap.parse_args()
+    if not args.csv.is_file():
+        print(f"check_bench: no such CSV: {args.csv}", file=sys.stderr)
+        return 2
+    suites = parse_csv(args.csv)
+    if args.update_all:
+        return update(suites, sorted(n for n, r in suites.items() if r),
+                      args.baseline_dir)
+    if args.update:
+        return update(suites, [n for n in args.update.split(",") if n],
+                      args.baseline_dir)
+    return check(suites, load_baselines(args.baseline_dir), args.threshold)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
