@@ -1,0 +1,88 @@
+"""Incremental index maintenance vs rebuild-the-world (DESIGN.md §11).
+
+Measures what a ~1% delta costs along each maintenance path:
+
+  reshred-incremental — ``shred.reshred_incremental``: merge the delta into
+                        the existing sorted grouping (bit-identical result);
+  full-rebuild        — ``build_shred`` on the post-delta snapshot (what the
+                        incremental path replaces);
+  engine-apply-delta  — the serving path: ``QueryEngine.apply_delta`` with a
+                        warm plan cache (incremental reshred + in-place plan
+                        upgrade, zero rebuilds);
+  engine-rebind       — the pre-§11 alternative: ``rebind`` + recompile,
+                        i.e. full invalidation per update.
+
+The speedup row (informational, us <= 0) is the headline: incremental
+reshred must beat the full rebuild by >= 5x at |delta|/N <= 1% at the
+default sizes.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+from repro.core import build_shred
+from repro.core.delta import DeltaBatch
+from repro.core.shred import reshred_incremental
+from repro.engine import QueryEngine
+
+from .timing import row, time_fn, tiny
+from .workloads import job_like, stats_like
+
+
+def _churn_delta(db, relation: str, frac: float, seed: int = 0) -> DeltaBatch:
+    """A shape-preserving ~``2*frac`` churn of one relation: ``frac`` of its
+    rows deleted, as many re-inserted (values resampled from the relation
+    itself, so join keys stay in-distribution)."""
+    rng = np.random.default_rng(seed)
+    n = db.relations[relation].num_rows
+    k = max(1, int(frac * n))
+    cols = {c: np.asarray(v)[rng.integers(0, n, k)]
+            for c, v in db.relations[relation].columns.items()}
+    return DeltaBatch.of(**{relation: {
+        "insert": cols, "delete": rng.choice(n, k, replace=False)}})
+
+
+def run(out):
+    s1, s2 = (120, 150) if tiny() else (8000, 10000)
+    for name, (db, q) in (("job_like", job_like(scale=s1)),
+                          ("stats_like", stats_like(scale=s2))):
+        # 0.5% of one child relation each way: |delta|/N well under 1%.
+        child = [r for r in db.relations][1]
+        delta = _churn_delta(db, child, 0.005)
+        base = build_shred(db, q)
+        db_next = db.apply(delta)
+
+        us_inc = time_fn(
+            lambda: jax.tree.leaves(reshred_incremental(base, db, q, delta)),
+            reps=5)
+        us_full = time_fn(
+            lambda: jax.tree.leaves(build_shred(db_next, q)), reps=3)
+        out(row(f"updates/{name}/reshred-incremental", us_inc,
+                f"delta={delta.size()};N={db.size()}"))
+        out(row(f"updates/{name}/full-rebuild", us_full))
+        out(row(f"updates/{name}/speedup", 0.0,
+                f"incremental_vs_rebuild={us_full/us_inc:.1f}x"))
+
+        # Serving path: warm engine absorbing one delta per call. The same
+        # churn delta stays valid across applies (row counts preserved).
+        engine = QueryEngine(db)
+        key = jax.random.key(0)
+        engine.sample(q, key)  # warm the plan cache
+
+        def apply_and_draw():
+            engine.apply_delta(delta)
+            return engine.sample(q, key).positions
+
+        us_apply = time_fn(apply_and_draw, reps=5)
+        st = engine.stats
+        out(row(f"updates/{name}/engine-apply-delta", us_apply,
+                f"upgrades={st.shred_upgrades};builds={st.shred_builds}"))
+
+        def rebind_and_draw():
+            engine.rebind(engine.db.apply(delta))
+            return engine.sample(q, key).positions
+
+        us_rebind = time_fn(rebind_and_draw, reps=3)
+        out(row(f"updates/{name}/engine-rebind-rebuild", us_rebind,
+                f"apply_vs_rebind={us_rebind/us_apply:.1f}x"))

@@ -2,7 +2,9 @@
 
 Public API:
     Database, Relation, Atom, JoinQuery       data model / queries
+    DeltaBatch, Database.apply                versioned snapshots (DESIGN.md §11)
     build_shred, Shred, get                   random-access index (CSR/USR)
+    reshred_incremental                       merge a delta into an index
     PoissonSampler, JoinSample                end-to-end Index-and-Probe
     sampling.*                                position-sampling methods
     yannakakis.*                              full joins + M&S baselines
@@ -25,15 +27,18 @@ _jax.config.update("jax_enable_x64", True)
 
 from .relations import Relation, pack_keys, dense_keys  # noqa: E402
 from .database import Database  # noqa: E402
+from .delta import DeltaBatch, RelationDelta  # noqa: E402
 from .jointree import Atom, JoinQuery, gyo_join_tree, is_acyclic, reroot_for  # noqa: E402
-from .shred import Shred, ShredNode, build_shred, build_plan  # noqa: E402
+from .shred import Shred, ShredNode, build_shred, build_plan, reshred_incremental  # noqa: E402
 from .probe import get, get_rows, csr_get_rows, usr_get_rows  # noqa: E402
 from . import sampling, estimate, yannakakis  # noqa: E402
 from .poisson import PoissonSampler, JoinSample  # noqa: E402
 
 __all__ = [
-    "Relation", "Database", "Atom", "JoinQuery", "gyo_join_tree", "is_acyclic",
-    "reroot_for", "Shred", "ShredNode", "build_shred", "build_plan", "get",
+    "Relation", "Database", "DeltaBatch", "RelationDelta", "Atom",
+    "JoinQuery", "gyo_join_tree", "is_acyclic",
+    "reroot_for", "Shred", "ShredNode", "build_shred", "build_plan",
+    "reshred_incremental", "get",
     "get_rows", "csr_get_rows", "usr_get_rows", "sampling", "estimate",
     "yannakakis", "PoissonSampler", "JoinSample", "pack_keys", "dense_keys",
 ]

@@ -1,4 +1,11 @@
-"""A tiny schema-aware database: named relations with ordered columns."""
+"""A tiny schema-aware database: named relations with ordered columns.
+
+Snapshots are immutable and *versioned* (DESIGN.md §11): the only way to
+change data is ``Database.apply(delta)``, which returns a NEW snapshot with
+``version + 1``. Untouched relations are shared by reference, so a delta
+over one relation costs O(|that relation| + |delta|) to apply and nothing
+for the rest of the database.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -19,10 +26,16 @@ class Database:
 
     Atom variables bind positionally to the schema order, which is what makes
     self-joins (one relation, several aliases with different variables) work.
+
+    ``version`` increases monotonically along an ``apply`` chain; two
+    snapshots with the same version are NOT guaranteed identical (versions
+    are per-lineage, not global) — the engine pairs version with object
+    identity for cache coherence (DESIGN.md §11).
     """
 
     relations: Dict[str, Relation]
     schemas: Dict[str, Tuple[str, ...]]
+    version: int = 0
 
     @staticmethod
     def from_columns(tables: Mapping[str, Mapping[str, Sequence]]) -> "Database":
@@ -46,3 +59,22 @@ class Database:
                 f"{len(schema)}-column relation {atom.relation}"
             )
         return Relation({v: rel.columns[c] for c, v in zip(schema, atom.variables)})
+
+    def apply(self, delta) -> "Database":
+        """The next snapshot: ``delta`` (a ``core.delta.DeltaBatch``) applied
+        to this one. Touched relations become "survivors then inserts"
+        (``rows[~delete_mask] ++ inserts``); untouched relations are shared
+        by reference. Never mutates ``self``.
+        """
+        from .delta import apply_relation_delta
+
+        unknown = set(delta.relations) - set(self.relations)
+        if unknown:
+            raise KeyError(f"delta touches unknown relations {sorted(unknown)}")
+        delta = delta.resolved({n: r.num_rows for n, r in self.relations.items()})
+        rels = dict(self.relations)
+        for name, d in delta.relations.items():
+            d.validate(name, self.relations[name].num_rows, self.schemas[name])
+            rels[name] = Relation(
+                apply_relation_delta(self.relations[name].columns, d))
+        return Database(rels, self.schemas, self.version + 1)

@@ -46,7 +46,7 @@ from repro.compat import axis_size
 __all__ = [
     "RootPartition", "StackedShred", "ShardedPoissonSampler",
     "partition_root", "semijoin_filter", "build_stacked_shred",
-    "fold_shard_key",
+    "build_stacked", "reshard_incremental", "fold_shard_key",
 ]
 
 I64 = jnp.int64
@@ -186,30 +186,22 @@ class StackedShred:
         return int(sum(self.join_sizes))
 
 
-def build_stacked_shred(
-    db: Database, query: JoinQuery, num_shards: int, rep: str = "usr",
-    prefilter: bool = True,
-) -> StackedShred:
-    """Build ``num_shards`` identical-shape shred indexes and stack them.
+def _build_one_shard(sdb: Database, query: JoinQuery, rep: str,
+                     valid: int) -> Shred:
+    """One shard's shred with pad rows weight-neutralized post-build."""
+    sh = build_shred(sdb, query, rep=rep)
+    n = sh.root.num_rows
+    if valid < n:
+        w = jnp.where(jnp.arange(n) < valid, sh.root.weight, 0)
+        root = dataclasses.replace(sh.root, weight=w)
+        prefE = jnp.concatenate([jnp.zeros((1,), I64), jnp.cumsum(w)])
+        sh = Shred(root=root, root_prefE=prefE, rep=sh.rep)
+    return sh
 
-    Children are semijoin-prefiltered once (shared by all shards), the root
-    is block-partitioned, and pad rows are weight-zeroed post-build so they
-    are invisible to sampling *and* flattening. All shards share one pytree
-    structure, so the stack is shard_map-able with in_specs P(axes) on the
-    leading dimension.
-    """
-    base = semijoin_filter(db, query) if prefilter else db
-    part = partition_root(base, query, num_shards)
-    built = []
-    for s, sdb in enumerate(part.shards):
-        sh = build_shred(sdb, query, rep=rep)
-        n = sh.root.num_rows
-        if part.valid[s] < n:
-            w = jnp.where(jnp.arange(n) < part.valid[s], sh.root.weight, 0)
-            root = dataclasses.replace(sh.root, weight=w)
-            prefE = jnp.concatenate([jnp.zeros((1,), I64), jnp.cumsum(w)])
-            sh = Shred(root=root, root_prefE=prefE, rep=sh.rep)
-        built.append(sh)
+
+def _stack_shards(built, part: RootPartition, query: JoinQuery,
+                  num_shards: int) -> StackedShred:
+    """Stack per-shard shreds (identical pytree shapes) into one pytree."""
     shred = jax.tree.map(lambda *xs: jnp.stack(xs), *built)
     w = jnp.stack([b.root.weight for b in built])
     pvar = query.prob_var
@@ -221,6 +213,98 @@ def build_stacked_shred(
         root_name=part.root_name, valid=part.valid,
         join_sizes=tuple(int(b.root_prefE[-1]) for b in built),
     )
+
+
+def build_stacked(
+    db: Database, query: JoinQuery, num_shards: int, rep: str = "usr",
+    prefilter: bool = True,
+) -> Tuple[StackedShred, Database]:
+    """Build ``num_shards`` identical-shape shred indexes and stack them;
+    also returns the (semijoin-filtered) base database the shards were cut
+    from — the anchor ``reshard_incremental`` diffs against (DESIGN.md §11).
+
+    Children are semijoin-prefiltered once (shared by all shards), the root
+    is block-partitioned, and pad rows are weight-zeroed post-build so they
+    are invisible to sampling *and* flattening. All shards share one pytree
+    structure, so the stack is shard_map-able with in_specs P(axes) on the
+    leading dimension.
+    """
+    base = semijoin_filter(db, query) if prefilter else db
+    part = partition_root(base, query, num_shards)
+    built = [_build_one_shard(sdb, query, rep, part.valid[s])
+             for s, sdb in enumerate(part.shards)]
+    return _stack_shards(built, part, query, num_shards), base
+
+
+def build_stacked_shred(
+    db: Database, query: JoinQuery, num_shards: int, rep: str = "usr",
+    prefilter: bool = True,
+) -> StackedShred:
+    """``build_stacked`` without the base handle (API-stable entry point)."""
+    return build_stacked(db, query, num_shards, rep=rep,
+                         prefilter=prefilter)[0]
+
+
+def _relations_equal(a, b) -> bool:
+    """Value equality of two relations (column names, dtypes, data)."""
+    if set(a.columns) != set(b.columns):
+        return False
+    for c in a.columns:
+        x, y = a.columns[c], b.columns[c]
+        if x is not y and (
+                x.dtype != y.dtype or x.shape != y.shape
+                or not bool(jnp.array_equal(x, y))):
+            return False
+    return True
+
+
+def reshard_incremental(
+    stacked: StackedShred, base: Database, db_new: Database,
+    query: JoinQuery, num_shards: int, rep: str = "usr",
+) -> Tuple[StackedShred, Database, int, int]:
+    """Advance a stacked index to a new snapshot, re-building only shards
+    whose inputs changed (DESIGN.md §11).
+
+    ``base`` is the filtered base ``build_stacked`` returned for the old
+    snapshot. The new snapshot is re-filtered and re-partitioned (linear
+    scans; the expensive part of a shard build is the per-shard sort-based
+    grouping, which is what reuse avoids); a shard is reused verbatim when
+    every child relation and its slice of the root block are value-equal.
+    Deltas that shift the root partition (row-count changes) or touch the
+    filtered children rebuild the affected shards — bit-identical to a
+    from-scratch ``build_stacked`` either way.
+
+    Returns ``(stacked_new, base_new, shards_reused, shards_rebuilt)``.
+    """
+    base_new = semijoin_filter(db_new, query)
+    part_new = partition_root(base_new, query, num_shards)
+    root_atom = build_plan(query).atom
+    # Only the query's own child relations feed the per-shard builds: a
+    # delta that also touches unrelated relations (other tenants' tables)
+    # must not defeat shard reuse.
+    child_rels = {a.relation for a in query.atoms} - {stacked.root_name}
+    children_same = (num_shards == stacked.num_shards) and all(
+        _relations_equal(base.relations[name], base_new.relations[name])
+        for name in child_rels)
+
+    built, reused = [], 0
+    old_root_data = stacked.shred.root.data  # columns have leading shard dim
+    for s, sdb in enumerate(part_new.shards):
+        can_reuse = (
+            children_same
+            and part_new.valid[s] == stacked.valid[s]
+            and _relations_equal(
+                sdb.instance_for(root_atom),
+                Relation({v: col[s]
+                          for v, col in old_root_data.columns.items()}))
+        )
+        if can_reuse:  # slice the full per-shard tree only for actual reuse
+            built.append(jax.tree.map(lambda x, s=s: x[s], stacked.shred))
+            reused += 1
+        else:
+            built.append(_build_one_shard(sdb, query, rep, part_new.valid[s]))
+    return (_stack_shards(built, part_new, query, num_shards), base_new,
+            reused, num_shards - reused)
 
 
 class ShardedPoissonSampler:

@@ -80,7 +80,21 @@ class JoinTreeNode:
 
 def _gyo_parents(query: JoinQuery) -> Optional[Dict[str, Optional[str]]]:
     """GYO ear decomposition. Returns atom-name -> parent-name (root: None),
-    or None if the query is cyclic."""
+    or None if the query is cyclic.
+
+    Disjoint atoms (variables shared with no remaining atom) are a
+    *deliberately supported* degenerate ear: their ``shared`` set is empty,
+    so the cover check ``shared <= o.var_set()`` holds vacuously and the
+    atom hangs off an arbitrary (first-remaining, hence deterministic)
+    parent via a keyless edge — the join tree of a disconnected acyclic
+    query connects its components with cross-product edges, which the shred
+    build and both GETs execute as single-group (key 0) children (see
+    shred._edge_keys). This cannot mask a cyclic component: an empty
+    ``shared`` set means the atom shares *no* variable with any remaining
+    atom, and a non-empty ``shared`` set only contains variables of the
+    atom's own component, so cross-component elimination never removes an
+    atom a cyclic component still needs (tests/test_jointree.py).
+    """
     remaining: Dict[str, Atom] = {a.name: a for a in query.atoms}
     parent: Dict[str, Optional[str]] = {}
     changed = True
@@ -89,7 +103,8 @@ def _gyo_parents(query: JoinQuery) -> Optional[Dict[str, Optional[str]]]:
         for name, atom in list(remaining.items()):
             others = [a for n, a in remaining.items() if n != name]
             shared = atom.var_set() & frozenset().union(*[o.var_set() for o in others])
-            # atom is an ear if some other atom covers all its shared variables
+            # atom is an ear if some other atom covers all its shared
+            # variables (vacuously true for a disjoint atom: keyless edge)
             for o in others:
                 if shared <= o.var_set():
                     parent[name] = o.name
@@ -106,6 +121,8 @@ def _gyo_parents(query: JoinQuery) -> Optional[Dict[str, Optional[str]]]:
 
 
 def is_acyclic(query: JoinQuery) -> bool:
+    """True iff GYO reduces the query to one atom. Disconnected queries are
+    acyclic iff every connected component is (cross products supported)."""
     return _gyo_parents(query) is not None
 
 

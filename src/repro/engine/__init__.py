@@ -19,6 +19,11 @@ batched multi-draw execution is the same API over a key vector
     bat  = engine.sample_batch(query, jax.random.split(key, 64))
     bat  = engine.sample_batch(query, keys, mesh=mesh)  # shard_map ∘ vmap
 
+The bound database is a versioned snapshot (DESIGN.md §11):
+``engine.apply_delta(delta)`` advances it while upgrading warm cache
+entries in place (incremental reshred, plans keep their traces);
+``engine.rebind(db)`` stays the full-invalidation escape hatch.
+
 Public API:
     QueryEngine       plan/cache/dispatch over one database
     CompiledPlan      a cached plan: shred index + jitted executors

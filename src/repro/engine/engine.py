@@ -20,6 +20,12 @@ Sharded execution (DESIGN.md §8) is the same contract over a device mesh:
 shard planner to stacked per-shard indexes held in the *same* shred cache
 (keyed by fingerprint x rep x mesh shape x shard count), so the warm
 sharded path also performs zero index rebuilds.
+
+The bound database is a *versioned snapshot* (DESIGN.md §11): cache keys
+carry the snapshot version, and ``apply_delta`` advances the binding while
+*upgrading* warm entries in place via incremental reshred — a small update
+costs milliseconds of merge work, zero rebuilds, and (shapes permitting)
+zero retraces, where ``rebind`` would throw everything away.
 """
 from __future__ import annotations
 
@@ -30,10 +36,12 @@ from typing import Dict, Optional, Tuple, Union
 import jax.numpy as jnp
 
 from repro.core.database import Database
-from repro.core.distributed import StackedShred, build_stacked_shred
+from repro.core.distributed import (
+    StackedShred, build_stacked, reshard_incremental,
+)
 from repro.core.jointree import JoinQuery
 from repro.core.poisson import JoinSample
-from repro.core.shred import Shred, build_plan, build_shred
+from repro.core.shred import Shred, build_plan, build_shred, reshred_incremental
 from repro.core import yannakakis
 
 from .capacity import CapacityPolicy, DEFAULT_POLICY
@@ -52,15 +60,37 @@ class CacheStats:
     """Observable cache behavior (asserted in tests, reported by serve).
 
     Stacked (sharded) index builds and hits count in the same
-    ``shred_builds`` / ``shred_hits`` — one index economy, two layouts."""
+    ``shred_builds`` / ``shred_hits`` — one index economy, two layouts.
+    ``apply_delta`` reports its work separately: ``shred_upgrades`` /
+    ``plan_upgrades`` count warm entries advanced incrementally (never
+    through ``shred_builds`` — upgrading is precisely *not* rebuilding),
+    and ``shards_reused`` / ``shards_rebuilt`` split the stacked-index
+    treatment per shard (DESIGN.md §11)."""
 
     shred_builds: int = 0
     shred_hits: int = 0
     plan_hits: int = 0
     plan_misses: int = 0
+    shred_upgrades: int = 0
+    plan_upgrades: int = 0
+    shards_reused: int = 0
+    shards_rebuilt: int = 0
 
     def snapshot(self) -> "CacheStats":
         return dataclasses.replace(self)
+
+
+@dataclasses.dataclass
+class _IndexEntry:
+    """One shred-cache slot: the index plus what ``apply_delta`` needs to
+    upgrade it — the query (for the join tree) and, for stacked indexes,
+    the filtered base snapshot and shard count (DESIGN.md §11)."""
+
+    index: Union[Shred, StackedShred]
+    query: JoinQuery
+    version: int
+    base: Optional[Database] = None   # stacked entries: filtered base db
+    num_shards: int = 0               # stacked entries only
 
 
 class QueryEngine:
@@ -87,23 +117,25 @@ class QueryEngine:
         self.policy = policy or DEFAULT_POLICY
         self.max_plans = max_plans
         self.stats = CacheStats()
-        self._shreds: "collections.OrderedDict[Tuple, Shred]" = collections.OrderedDict()
+        self._shreds: "collections.OrderedDict[Tuple, _IndexEntry]" = collections.OrderedDict()
         self._plans: "collections.OrderedDict[Tuple, CompiledPlan]" = collections.OrderedDict()
-        # Shard-planner verdicts (tiny; root size + mesh shape + policy are
-        # all engine-fixed, so a verdict never changes until rebind()).
+        # Shard-planner verdicts (tiny; root size + mesh shape + policy only
+        # change when the bound snapshot moves — apply_delta drops verdicts
+        # whose root relation was touched, rebind() drops them all). Values
+        # are (ShardPlan, root relation name).
         self._shard_verdicts: "collections.OrderedDict[Tuple, object]" = collections.OrderedDict()
 
     # -- cache plumbing ------------------------------------------------------
     def _shred_for(self, query: JoinQuery, rep: str) -> Shred:
-        key = plan_key(query, rep)
+        key = plan_key(query, rep, self.db.version)
         hit = self._shreds.get(key)
         if hit is not None:
             self._shreds.move_to_end(key)
             self.stats.shred_hits += 1
-            return hit
+            return hit.index
         self.stats.shred_builds += 1
         shred = build_shred(self.db, query, rep=rep)
-        self._shreds[key] = shred
+        self._shreds[key] = _IndexEntry(shred, query, self.db.version)
         while len(self._shreds) > self.max_plans:
             self._shreds.popitem(last=False)
         return shred
@@ -112,15 +144,16 @@ class QueryEngine:
                            num_shards: int) -> StackedShred:
         """The stacked per-shard index for a sharded plan; lives in the same
         LRU as single-device shreds under a mesh-extended key."""
-        key = sharded_plan_key(query, rep, mesh, num_shards)
+        key = sharded_plan_key(query, rep, mesh, num_shards, self.db.version)
         hit = self._shreds.get(key)
         if hit is not None:
             self._shreds.move_to_end(key)
             self.stats.shred_hits += 1
-            return hit
+            return hit.index
         self.stats.shred_builds += 1
-        stacked = build_stacked_shred(self.db, query, num_shards, rep=rep)
-        self._shreds[key] = stacked
+        stacked, base = build_stacked(self.db, query, num_shards, rep=rep)
+        self._shreds[key] = _IndexEntry(stacked, query, self.db.version,
+                                        base=base, num_shards=num_shards)
         while len(self._shreds) > self.max_plans:
             self._shreds.popitem(last=False)
         return stacked
@@ -140,7 +173,7 @@ class QueryEngine:
         if project is not None and query.prob_var is not None \
                 and query.prob_var not in project:
             raise ValueError("prob_var (y) must be in the projection A")
-        key = executor_key(query, rep, method, project)
+        key = executor_key(query, rep, method, project, self.db.version)
         hit = self._plans.get(key)
         if hit is not None:
             self._plans.move_to_end(key)
@@ -176,18 +209,21 @@ class QueryEngine:
         fp = query_fingerprint(query)
         vkey = (fp, mesh_fingerprint(mesh),
                 tuple(axes) if axes is not None else None)
-        sp = self._shard_verdicts.get(vkey)
-        if sp is None:  # GYO + planner only on the first sighting
+        hit = self._shard_verdicts.get(vkey)
+        if hit is None:  # GYO + planner only on the first sighting
             root_atom = build_plan(query).atom
             root_rows = self.db.relations[root_atom.relation].num_rows
             sp = plan_shards(mesh, root_rows, self.policy, axes=axes)
-            self._shard_verdicts[vkey] = sp
+            self._shard_verdicts[vkey] = (sp, root_atom.relation)
             while len(self._shard_verdicts) > self.max_plans:
                 self._shard_verdicts.popitem(last=False)
+        else:
+            sp, _root = hit
         if not sp.axes:
             return self.compile(query, rep=rep, method=method, project=project)
         project = tuple(project) if project else None
-        key = sharded_executor_key(query, rep, method, project, mesh, sp.axes)
+        key = sharded_executor_key(query, rep, method, project, mesh, sp.axes,
+                                   self.db.version)
         hit = self._plans.get(key)
         if hit is not None:
             self._plans.move_to_end(key)
@@ -209,11 +245,92 @@ class QueryEngine:
         """Bind a new database instance, dropping both caches. Always
         invalidates — even an identical schema fingerprint can carry
         different data values, and shreds depend on values (cheap
-        correctness over cleverness; see DESIGN.md §7)."""
+        correctness over cleverness; see DESIGN.md §7). For *derived*
+        snapshots, ``apply_delta`` keeps the caches warm instead."""
         self.db = db
         self._shreds.clear()
         self._plans.clear()
         self._shard_verdicts.clear()  # root sizes may differ
+        return self
+
+    def apply_delta(self, delta) -> "QueryEngine":
+        """Advance the bound snapshot to ``self.db.apply(delta)`` and
+        *upgrade* every warm cache entry instead of dropping it
+        (DESIGN.md §11).
+
+        Single-device shreds touched by the delta are merged forward via
+        ``reshred_incremental`` (bit-identical to a rebuild, at delta
+        cost); stacked shreds are re-partitioned with per-shard reuse
+        (``shards_reused``/``shards_rebuilt`` in ``CacheStats``); compiled
+        plans keep their jitted executors, so a shape-preserving delta
+        costs zero retraces on the next warm draw. Entries for queries the
+        delta does not touch are re-keyed to the new version for free.
+        ``rebind`` remains the full-invalidation escape hatch.
+        """
+        old_db = self.db
+        new_db = old_db.apply(delta)
+        new_v = new_db.version
+        touched = set(delta.touched())
+
+        upgraded: Dict[Tuple, object] = {}  # key sans version -> new index
+        new_shreds: "collections.OrderedDict[Tuple, _IndexEntry]" = \
+            collections.OrderedDict()
+        for key, entry in self._shreds.items():
+            qrels = {a.relation for a in entry.query.atoms}
+            if not (touched & qrels):
+                new_entry = dataclasses.replace(entry, version=new_v)
+            elif isinstance(entry.index, StackedShred):
+                stacked, base, reused, rebuilt = reshard_incremental(
+                    entry.index, entry.base, new_db, entry.query,
+                    entry.num_shards, rep=key[1])
+                self.stats.shred_upgrades += 1
+                self.stats.shards_reused += reused
+                self.stats.shards_rebuilt += rebuilt
+                new_entry = _IndexEntry(stacked, entry.query, new_v,
+                                        base=base,
+                                        num_shards=entry.num_shards)
+            else:
+                shred = reshred_incremental(entry.index, old_db,
+                                            entry.query, delta)
+                self.stats.shred_upgrades += 1
+                new_entry = _IndexEntry(shred, entry.query, new_v)
+            upgraded[key[:-1]] = new_entry.index
+            new_shreds[key[:-1] + (new_v,)] = new_entry
+        self._shreds = new_shreds
+
+        new_plans: "collections.OrderedDict[Tuple, CompiledPlan]" = \
+            collections.OrderedDict()
+        for key, plan in self._plans.items():
+            qrels = {a.relation for a in plan.query.atoms}
+            if touched & qrels:
+                if isinstance(plan, ShardedPlan):
+                    skey = sharded_plan_key(plan.query, key[1], plan.mesh,
+                                            plan.num_shards)[:-1]
+                    stacked = upgraded.get(skey)
+                    if stacked is None:
+                        # Orphaned sharded plan (its stacked index fell out
+                        # of the LRU): no base to diff against — drop it.
+                        continue
+                    plan.rebind_stacked(stacked)
+                else:
+                    skey = plan_key(plan.query, key[1])[:-1]
+                    shred = upgraded.get(skey)
+                    if shred is None:  # orphan: upgrade from its own index
+                        shred = reshred_incremental(plan.shred, old_db,
+                                                    plan.query, delta)
+                        self.stats.shred_upgrades += 1
+                    plan.rebind_shred(shred)
+                self.stats.plan_upgrades += 1
+            new_plans[key[:-1] + (new_v,)] = plan
+        self._plans = new_plans
+
+        # Shard-planner verdicts keyed off a touched root relation are
+        # stale (the root row count may have moved); recompute lazily.
+        for vkey in [k for k, (_, root) in self._shard_verdicts.items()
+                     if root in touched]:
+            del self._shard_verdicts[vkey]
+
+        self.db = new_db
         return self
 
     # -- entry points --------------------------------------------------------
@@ -313,8 +430,29 @@ class QueryEngine:
         """|Q(db)| in O(1) from the cached index (never materialized)."""
         return self.compile(query).join_size
 
+    def cache_info(self) -> Dict[str, object]:
+        """Staleness-observable cache state (DESIGN.md §11): the bound
+        snapshot version plus every cache entry's version. Serve's stats
+        path reports this, and tests assert entries never trail the bound
+        version after ``apply_delta``."""
+        return {
+            "db_version": self.db.version,
+            "shreds": [
+                {"fingerprint": k[0], "rep": k[1], "version": e.version,
+                 "stacked": isinstance(e.index, StackedShred)}
+                for k, e in self._shreds.items()
+            ],
+            "plans": [
+                {"fingerprint": k[0], "rep": k[1], "version": k[-1],
+                 "sharded": isinstance(p, ShardedPlan)}
+                for k, p in self._plans.items()
+            ],
+        }
+
     def explain(self, query: JoinQuery, *, rep: Optional[str] = None) -> str:
-        """Human-readable plan: the (rerooted) join tree + cache state."""
+        """Human-readable plan: the (rerooted) join tree + cache state,
+        including the bound snapshot version and per-entry cache versions
+        (staleness is observable, not inferred — DESIGN.md §11)."""
         plan = self.compile(query, rep=rep)
         tree = build_plan(query)  # the rerooted tree the plan executes
         lines = [
@@ -322,10 +460,19 @@ class QueryEngine:
             "  join tree (GYO):",
         ]
         lines += ["    " + l for l in tree.pretty().rstrip().split("\n")]
+        info = self.cache_info()
+        fp = query_fingerprint(query)
+        entry_vs = sorted({e["version"] for e in
+                           info["shreds"] + info["plans"]
+                           if e["fingerprint"] == fp})
         lines += [
             f"  |Q(db)| = {plan.join_size}",
+            f"  db version={info['db_version']}  "
+            f"entry versions={entry_vs or [info['db_version']]}",
             f"  cached shreds={len(self._shreds)} plans={len(self._plans)} "
-            f"(hits: shred={self.stats.shred_hits} plan={self.stats.plan_hits})",
+            f"(hits: shred={self.stats.shred_hits} plan={self.stats.plan_hits}"
+            f"; upgrades: shred={self.stats.shred_upgrades} "
+            f"plan={self.stats.plan_upgrades})",
         ]
         return "\n".join(lines)
 

@@ -9,12 +9,15 @@ The compiled-plan cache is keyed by *structure*, never by data values:
     row counts — everything that determines traced array shapes/dtypes and
     hence whether a cached shred + jitted executor is reusable.
 
-A ``QueryEngine`` owns one (immutable) ``Database``, so data identity is
-implied by engine identity and ``rebind()`` always drops both caches; the
-schema fingerprint is exposed for callers keying *across* engines (e.g.
-external plan registries, diagnostics). Mutating relation *values* in
-place while keeping shapes is outside the contract (relations are
-immutable pytrees — see DESIGN.md §7 for the cache-coherence policy).
+A ``QueryEngine`` binds a lineage of immutable ``Database`` *snapshots*
+(DESIGN.md §11): cache keys carry the bound snapshot's ``version``, so an
+``apply_delta`` step re-keys upgraded entries under the new version and
+stale-version entries can never serve a newer snapshot. ``rebind()`` still
+drops both caches wholesale — a rebound database is a new lineage, not a
+new version. The schema fingerprint is exposed for callers keying *across*
+engines (e.g. external plan registries, diagnostics). Mutating relation
+*values* in place while keeping shapes is outside the contract (relations
+are immutable pytrees — see DESIGN.md §7 for the cache-coherence policy).
 """
 from __future__ import annotations
 
@@ -56,17 +59,19 @@ def schema_fingerprint(db: Database) -> str:
     return _digest(repr(tuple(rels)))
 
 
-def plan_key(query: JoinQuery, rep: str) -> Tuple[str, str]:
-    """Cache key of a shred index: query structure x representation."""
-    return (query_fingerprint(query), rep)
+def plan_key(query: JoinQuery, rep: str, version: int = 0) -> Tuple[str, str, int]:
+    """Cache key of a shred index: query structure x representation x the
+    bound snapshot version (DESIGN.md §11)."""
+    return (query_fingerprint(query), rep, version)
 
 
 def executor_key(
-    query: JoinQuery, rep: str, method: str, project: Optional[Tuple[str, ...]]
-) -> Tuple[str, str, str, Optional[Tuple[str, ...]]]:
+    query: JoinQuery, rep: str, method: str,
+    project: Optional[Tuple[str, ...]], version: int = 0,
+) -> Tuple[str, str, str, Optional[Tuple[str, ...]], int]:
     """Cache key of a compiled plan: the shred key plus everything baked
     statically into the jitted executor."""
-    return (query_fingerprint(query), rep, method, project)
+    return (query_fingerprint(query), rep, method, project, version)
 
 
 def mesh_fingerprint(mesh) -> Tuple[Tuple[str, int], ...]:
@@ -82,17 +87,19 @@ def mesh_fingerprint(mesh) -> Tuple[Tuple[str, int], ...]:
 
 
 def sharded_plan_key(query: JoinQuery, rep: str, mesh,
-                     num_shards: int) -> Tuple:
+                     num_shards: int, version: int = 0) -> Tuple:
     """Cache key of a *stacked* shred index: the single-device shred key
     extended with the mesh shape and shard count."""
-    return (query_fingerprint(query), rep, mesh_fingerprint(mesh), num_shards)
+    return (query_fingerprint(query), rep, mesh_fingerprint(mesh),
+            num_shards, version)
 
 
 def sharded_executor_key(
     query: JoinQuery, rep: str, method: str,
     project: Optional[Tuple[str, ...]], mesh, axes: Tuple[str, ...],
+    version: int = 0,
 ) -> Tuple:
     """Cache key of a sharded compiled plan: everything static in the
     shard_map executors, including the partition axes."""
     return (query_fingerprint(query), rep, method, project,
-            mesh_fingerprint(mesh), tuple(axes))
+            mesh_fingerprint(mesh), tuple(axes), version)

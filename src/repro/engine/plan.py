@@ -60,18 +60,41 @@ class CompiledPlan:
     policy: CapacityPolicy = DEFAULT_POLICY
 
     def __post_init__(self):
-        root = self.shred.root
+        self._default_cap = None
+        self._arrival_cap = None
+        self._bind_shred(self.shred)
+        self._jit = executors.sample_executor(self.method, self.project)
+        self._batched_jit = executors.batched_sample_executor(
+            self.method, self.project)
+
+    def _bind_shred(self, shred: Shred) -> None:
+        root = shred.root
+        self.shred = shred
         self.w = root.weight
-        self.prefE = self.shred.root_prefE
+        self.prefE = shred.root_prefE
         if self.query.prob_var is not None:
             if self.query.prob_var not in root.variables:
                 raise AssertionError("build_plan must reroot prob_var to the root")
             self.p = root.data.column(self.query.prob_var)
+            # Sticky capacities (DESIGN.md §11): recomputed from the new
+            # (w, p) but never shrunk below a capacity already traced —
+            # a delta that lowers E[k] keeps the cached trace instead of
+            # recompiling for a marginally smaller buffer. Growth retraces
+            # once, which is the price of not overflowing.
+            self._default_cap = max(self._default_cap or 0,
+                                    self.policy.sample_capacity(self.w, self.p))
+            self._arrival_cap = max(self._arrival_cap or 0,
+                                    self.policy.arrival_capacity(self.w, self.p))
         else:
             self.p = None
-        self._jit = executors.sample_executor(self.method, self.project)
-        self._batched_jit = executors.batched_sample_executor(
-            self.method, self.project)
+
+    def rebind_shred(self, shred: Shred) -> "CompiledPlan":
+        """Swap in an (incrementally upgraded) index for a newer snapshot,
+        keeping the jitted executors — and with them every cached trace.
+        A delta that preserves array shapes therefore costs zero retraces
+        on the next warm draw (DESIGN.md §11)."""
+        self._bind_shred(shred)
+        return self
 
     # -- capacity planning ---------------------------------------------------
     @property
@@ -82,10 +105,12 @@ class CompiledPlan:
         return float(estimate.expected_sample_size(self.w, self.p))
 
     def default_capacity(self) -> int:
-        return self.policy.sample_capacity(self.w, self.p)
+        return (self._default_cap if self._default_cap is not None
+                else self.policy.sample_capacity(self.w, self.p))
 
     def arrival_capacity(self) -> int:
-        return self.policy.arrival_capacity(self.w, self.p)
+        return (self._arrival_cap if self._arrival_cap is not None
+                else self.policy.arrival_capacity(self.w, self.p))
 
     # -- execution -----------------------------------------------------------
     def sample(self, key, cap: Optional[int] = None, rep: Optional[str] = None,

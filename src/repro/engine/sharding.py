@@ -120,9 +120,15 @@ class ShardedPlan:
         self.project = tuple(project) if project else None
         self.mesh = mesh
         self.axes = tuple(axes)
+        self.policy = policy
+        self._samplers: Dict[Tuple[int, int], callable] = {}
+        self._batched_samplers: Dict[Tuple[int, int], callable] = {}
+        self._flattener = None
+        self._bind_stacked(stacked)
+
+    def _bind_stacked(self, stacked: StackedShred) -> None:
         self.stacked = stacked
         self.num_shards = stacked.num_shards
-        self.policy = policy
         self.join_sizes = stacked.join_sizes
         # Global flat offset of each shard's position space: shard flattens
         # concatenate to the global flatten, so shard-local position + base
@@ -135,18 +141,31 @@ class ShardedPlan:
             means = np.asarray(jax.vmap(estimate.expected_sample_size)(w, p))
             stds = np.asarray(jax.vmap(estimate.sample_std)(w, p))
             # One static capacity for every shard: plan for the heaviest.
-            self.cap = policy.plan(float(means.max(initial=0.0)),
-                                   float(stds.max(initial=1.0)))
+            # Sticky across rebinds (DESIGN.md §11): a delta that lowers the
+            # estimate keeps the already-traced capacity; growth retraces.
+            self.cap = max(getattr(self, "cap", None) or 0, self.policy.plan(
+                float(means.max(initial=0.0)), float(stds.max(initial=1.0))))
             mass = float(np.asarray(
                 jax.vmap(estimate.exprace_arrival_mass)(w, p)).max(initial=0.0))
-            self.acap = policy.plan(mass * 1.1 + 8, mass ** 0.5)
+            self.acap = max(getattr(self, "acap", 0),
+                            self.policy.plan(mass * 1.1 + 8, mass ** 0.5))
         else:
             self.cap = None
             self.acap = 0
-        self.flat_cap = policy.flatten_capacity(max(self.join_sizes, default=0))
-        self._samplers: Dict[Tuple[int, int], callable] = {}
-        self._batched_samplers: Dict[Tuple[int, int], callable] = {}
-        self._flattener = None
+        flat_cap = max(getattr(self, "flat_cap", 0),
+                       self.policy.flatten_capacity(
+                           max(self.join_sizes, default=0)))
+        if getattr(self, "flat_cap", None) != flat_cap:
+            self._flattener = None  # static cap changed: next flatten retraces
+        self.flat_cap = flat_cap
+
+    def rebind_stacked(self, stacked: StackedShred) -> "ShardedPlan":
+        """Swap in an (incrementally resharded) stacked index for a newer
+        snapshot, keeping the shard_map executor caches. A delta that
+        preserves per-shard shapes and planned capacities costs zero
+        retraces on the next warm draw (DESIGN.md §11)."""
+        self._bind_stacked(stacked)
+        return self
 
     # -- derived -------------------------------------------------------------
     @property

@@ -7,6 +7,10 @@ compiled-plan cache, so only the first request of each shape pays GYO +
 index build + XLA trace (DESIGN.md §7). Requests accumulate up to
 ``--max-batch`` or ``--max-wait-ms`` and flush as ONE ``sample_batch``
 dispatch per query shape; the loop reports p50/p99 latency and draws/sec.
+``UpdateRequest``s carry database deltas and interleave with draws: each
+acts as a flush barrier, so in-flight batches always read one consistent
+snapshot version and warm plans upgrade in place between flushes
+(DESIGN.md §11).
 
 The decode step function is the same one the dry-run lowers for the
 decode_32k / long_500k cells (launch/dryrun.py `make_serve_step`); here it
@@ -86,6 +90,21 @@ class JoinSampleRequest:
     overflow: Optional[bool] = None   # filled by the service
     latency_s: Optional[float] = None  # enqueue -> results routed back
     enqueued_s: Optional[float] = None  # set by MicroBatcher.submit
+    db_version: Optional[int] = None  # snapshot version the draw was served from
+
+
+@dataclasses.dataclass
+class UpdateRequest:
+    """One tenant update: advance the engine's snapshot by ``delta`` (a
+    ``core.delta.DeltaBatch``). Serialized against draws by the micro-batch
+    loop (DESIGN.md §11): draws enqueued before the update are flushed
+    against the pre-delta snapshot first, so no in-flight batch ever mixes
+    versions."""
+
+    delta: object
+    applied_version: Optional[int] = None  # post-apply db version
+    latency_s: Optional[float] = None
+    enqueued_s: Optional[float] = None
 
 
 class MicroBatcher:
@@ -106,6 +125,13 @@ class MicroBatcher:
     flushes), and per-request results are routed back by lane index.
     ``clock`` is injectable so deadline behavior is unit-testable
     (``tests/test_serve_batcher.py``).
+
+    ``UpdateRequest``s interleave with draws (DESIGN.md §11): an update
+    acts as a barrier — pending draws flush first (reading the pre-delta
+    snapshot), then the delta is applied via ``engine.apply_delta`` (warm
+    cache entries upgrade in place, so the next flush pays no rebuild),
+    and draws submitted afterwards read the new version. Every completed
+    draw records the ``db_version`` it was served from.
     """
 
     def __init__(self, engine, *, max_batch: int = 64,
@@ -123,15 +149,30 @@ class MicroBatcher:
         self.flushes = 0
         self.dispatches = 0
         self.served = 0
+        self.updates_applied = 0
 
-    def submit(self, req: JoinSampleRequest) -> List[JoinSampleRequest]:
+    def submit(self, req) -> List:
         """Enqueue one request; returns completed requests (non-empty only
-        when this arrival filled the batch and triggered a flush)."""
+        when this arrival triggered work: a full batch for draws, or the
+        flush-then-apply barrier for updates)."""
         req.enqueued_s = self.clock()
+        if isinstance(req, UpdateRequest):
+            return self._apply_update(req)
         self.pending.append(req)
         if len(self.pending) >= self.max_batch:
             return self.flush()
         return []
+
+    def _apply_update(self, req: UpdateRequest) -> List:
+        """The update barrier: drain pending draws on the current snapshot,
+        then advance it. In-flight batches therefore always read ONE
+        consistent version; later draws read the next."""
+        done = self.flush()
+        self.engine.apply_delta(req.delta)
+        req.applied_version = self.engine.db.version
+        req.latency_s = self.clock() - req.enqueued_s
+        self.updates_applied += 1
+        return done + [req]
 
     def poll(self) -> List[JoinSampleRequest]:
         """Deadline check: flush iff the oldest pending request has waited
@@ -152,6 +193,7 @@ class MicroBatcher:
         groups: Dict[str, List[JoinSampleRequest]] = {}
         for r in batch:
             groups.setdefault(query_fingerprint(r.query), []).append(r)
+        version = getattr(self.engine.db, "version", 0)
         for reqs in groups.values():
             keys = jnp.stack([jax.random.key(r.seed) for r in reqs])
             smp = self.engine.sample_batch(reqs[0].query, keys,
@@ -164,18 +206,21 @@ class MicroBatcher:
                 r.count = int(counts[lane])
                 r.overflow = bool(overflow[lane])
                 r.latency_s = done_t - r.enqueued_s
+                r.db_version = version
             self.dispatches += 1
         self.flushes += 1
         self.served += len(batch)
         return batch
 
 
-def serve_join_samples(engine, requests: List[JoinSampleRequest], mesh=None,
+def serve_join_samples(engine, requests: List, mesh=None,
                        max_batch: int = 64, max_wait_ms: float = 2.0,
-                       ) -> List[JoinSampleRequest]:
+                       ) -> List:
     """Serve a request list through the micro-batcher (closed loop: submit
-    everything, then drain). Kept as the library entry point the demo and
-    tests share; results are routed back onto the request objects."""
+    everything, then drain). The list may interleave ``JoinSampleRequest``
+    draws with ``UpdateRequest`` deltas; updates barrier the stream in
+    arrival order (DESIGN.md §11). Kept as the library entry point the demo
+    and tests share; results are routed back onto the request objects."""
     mb = MicroBatcher(engine, max_batch=max_batch, max_wait_ms=max_wait_ms,
                       mesh=mesh)
     done: List[JoinSampleRequest] = []
@@ -192,8 +237,9 @@ def _pctl(xs: List[float], q: float) -> float:
 
 
 def _join_demo(n_requests: int, devices: int = 1, max_batch: int = 64,
-               max_wait_ms: float = 2.0) -> None:
+               max_wait_ms: float = 2.0, updates: int = 0) -> None:
     from repro.core import Atom, JoinQuery
+    from repro.core.delta import DeltaBatch
     from repro.data.pipeline import make_corpus_db
     from repro.engine import QueryEngine
     from repro.launch.mesh import force_host_devices
@@ -212,17 +258,31 @@ def _join_demo(n_requests: int, devices: int = 1, max_batch: int = 64,
     engine = QueryEngine(db)
     mb = MicroBatcher(engine, max_batch=max_batch, max_wait_ms=max_wait_ms,
                       mesh=mesh)
-    reqs = [JoinSampleRequest(query=q_qual if i % 3 else q_flat, seed=i)
-            for i in range(n_requests)]
+    rng = np.random.default_rng(0)
+    reqs: List = [JoinSampleRequest(query=q_qual if i % 3 else q_flat, seed=i)
+                  for i in range(n_requests)]
+    if updates:
+        # Shape-preserving doc churn (k in, k out) spread through the stream:
+        # warm plans upgrade in place, zero rebuilds between flushes.
+        n_docs = int(db.relations["Doc"].num_rows)
+        every = max(1, n_requests // updates)
+        for u in range(updates):
+            delta = DeltaBatch.of(Doc={
+                "insert": {"doc": rng.integers(0, n_docs, 4),
+                           "clust": rng.integers(0, 64, 4)},
+                "delete": rng.choice(n_docs, size=4, replace=False)})
+            reqs.insert(min((u + 1) * every + u, len(reqs)),
+                        UpdateRequest(delta))
     t0 = time.perf_counter()
-    done: List[JoinSampleRequest] = []
+    done: List = []
     for r in reqs:
         done += mb.submit(r)
         done += mb.poll()
     done += mb.flush()
     wall = time.perf_counter() - t0
-    assert len(done) == n_requests
-    lats = [r.latency_s * 1e3 for r in done]
+    assert len(done) == n_requests + (updates or 0)
+    draws = [r for r in done if isinstance(r, JoinSampleRequest)]
+    lats = [r.latency_s * 1e3 for r in draws]
     st = engine.stats
     shards = ""
     if mesh is not None:  # the planner may degrade to the unsharded plan
@@ -237,6 +297,10 @@ def _join_demo(n_requests: int, devices: int = 1, max_batch: int = 64,
           f"p99={_pctl(lats, .99):.1f}ms  (incl. cold compile in early flushes)")
     print(f"  cache: shred_builds={st.shred_builds} shred_hits={st.shred_hits} "
           f"plan_hits={st.plan_hits} plan_misses={st.plan_misses}")
+    if updates:
+        print(f"  updates: applied={mb.updates_applied} "
+              f"db_version={engine.db.version} "
+              f"upgrades: shred={st.shred_upgrades} plan={st.plan_upgrades}")
 
 
 def main():
@@ -255,10 +319,14 @@ def main():
     ap.add_argument("--max-wait-ms", type=float, default=2.0,
                     help="join mode: flush when the oldest pending request "
                          "has waited this long")
+    ap.add_argument("--updates", type=int, default=0,
+                    help="join mode: interleave this many shape-preserving "
+                         "update requests into the demo stream")
     args = ap.parse_args()
     if args.mode == "join":
         _join_demo(args.requests, devices=args.devices,
-                   max_batch=args.max_batch, max_wait_ms=args.max_wait_ms)
+                   max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+                   updates=args.updates)
         return
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=list(rng.integers(1, 200, rng.integers(4, 12))),

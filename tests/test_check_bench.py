@@ -1,0 +1,116 @@
+"""The CI perf gate's verdict taxonomy: regression (exit 1) vs coverage
+loss (exit 3 — a baselined suite/rows missing from the fresh run), plus the
+baseline refresh path. A renamed suite must NOT pass silently and must be
+distinguishable from a slowdown.
+"""
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_bench  # noqa: E402
+
+
+CSV = """name,us_per_call,derived
+# --- alpha ---
+alpha/a,100.0,
+alpha/b,200.0,
+alpha/info,0.0,cache=hit
+# --- beta ---
+beta/x,50.0,
+"""
+
+
+def _write(tmp_path, name, text):
+    p = tmp_path / name
+    p.write_text(text)
+    return p
+
+
+def _baseline(tmp_path, suite, rows):
+    p = tmp_path / f"BENCH_{suite}.json"
+    p.write_text(json.dumps({"suite": suite, "rows": rows}))
+    return p
+
+
+def test_parse_skips_informational_rows(tmp_path):
+    suites = check_bench.parse_csv(_write(tmp_path, "b.csv", CSV))
+    assert suites == {"alpha": {"alpha/a": 100.0, "alpha/b": 200.0},
+                      "beta": {"beta/x": 50.0}}
+
+
+def test_gate_ok(tmp_path):
+    csv = _write(tmp_path, "b.csv", CSV)
+    _baseline(tmp_path, "alpha", {"alpha/a": 100.0, "alpha/b": 200.0})
+    suites = check_bench.parse_csv(csv)
+    assert check_bench.check(
+        suites, check_bench.load_baselines(tmp_path), 0.30) == 0
+
+
+def test_gate_regression_exit_1(tmp_path):
+    csv = _write(tmp_path, "b.csv", CSV)
+    _baseline(tmp_path, "alpha", {"alpha/a": 10.0, "alpha/b": 20.0})
+    suites = check_bench.parse_csv(csv)
+    assert check_bench.check(
+        suites, check_bench.load_baselines(tmp_path),
+        0.30) == check_bench.EXIT_REGRESSED == 1
+
+
+def test_missing_suite_exit_3(tmp_path, capsys):
+    """A suite present in the baseline but absent from the run (renamed or
+    dropped) is a coverage failure with its own exit code and an
+    actionable message."""
+    csv = _write(tmp_path, "b.csv", CSV)
+    _baseline(tmp_path, "gamma", {"gamma/g": 10.0})
+    suites = check_bench.parse_csv(csv)
+    rc = check_bench.check(suites, check_bench.load_baselines(tmp_path), 0.30)
+    assert rc == check_bench.EXIT_MISSING_SUITE == 3
+    err = capsys.readouterr().err
+    assert "gamma" in err and "--update gamma" in err
+
+
+def test_renamed_rows_exit_3(tmp_path):
+    csv = _write(tmp_path, "b.csv", CSV)
+    _baseline(tmp_path, "alpha",
+              {"alpha/old1": 10.0, "alpha/old2": 10.0, "alpha/a": 100.0})
+    suites = check_bench.parse_csv(csv)
+    assert check_bench.check(
+        suites, check_bench.load_baselines(tmp_path),
+        0.30) == check_bench.EXIT_MISSING_SUITE
+
+
+def test_regression_beats_missing_in_exit_code(tmp_path, capsys):
+    """Mixed failure: the regression verdict wins the exit code (following
+    the exit-3 refresh playbook would bake the slowdown into the baseline),
+    but both failures are still reported."""
+    csv = _write(tmp_path, "b.csv", CSV)
+    _baseline(tmp_path, "alpha", {"alpha/a": 10.0, "alpha/b": 10.0})
+    _baseline(tmp_path, "gamma", {"gamma/g": 10.0})
+    suites = check_bench.parse_csv(csv)
+    rc = check_bench.check(suites, check_bench.load_baselines(tmp_path), 0.30)
+    assert rc == check_bench.EXIT_REGRESSED
+    err = capsys.readouterr().err
+    assert "alpha" in err and "gamma" in err
+
+
+def test_update_writes_baseline(tmp_path):
+    csv = _write(tmp_path, "b.csv", CSV)
+    suites = check_bench.parse_csv(csv)
+    assert check_bench.update(suites, ["beta"], tmp_path) == 0
+    data = json.loads((tmp_path / "BENCH_beta.json").read_text())
+    assert data == {"suite": "beta", "rows": {"beta/x": 50.0}}
+    # the freshly written baseline gates clean
+    assert check_bench.check(
+        suites, check_bench.load_baselines(tmp_path), 0.30) == 0
+
+
+def test_repo_baselines_name_live_suites():
+    """Every committed BENCH_*.json names a suite benchmarks.run defines —
+    the committed baselines can never themselves trip exit 3."""
+    run_py = (ROOT / "benchmarks" / "run.py").read_text()
+    for f in sorted(ROOT.glob("BENCH_*.json")):
+        suite = json.loads(f.read_text())["suite"]
+        assert f'("{suite}"' in run_py, \
+            f"{f.name} names suite {suite!r} not defined in benchmarks/run.py"

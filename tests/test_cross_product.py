@@ -1,0 +1,112 @@
+"""Keyless children end-to-end: disjoint atoms execute as cross-product
+(single-group) edges through shred build, both GETs, Poisson sampling, and
+the engine (the deliberate support decision documented in
+jointree._gyo_parents and shred._edge_keys).
+"""
+import itertools
+
+import numpy as np
+import jax
+import pytest
+
+from repro.core import Atom, Database, JoinQuery, build_shred, yannakakis
+from repro.engine import QueryEngine
+
+
+@pytest.fixture(scope="module")
+def db():
+    return Database.from_columns({
+        "R": {"x": [1, 2, 3], "p": [0.5, 0.2, 0.9]},
+        "U": {"w": [10, 20]},
+        "V": {"v": [7]},
+        "S": {"x": [1, 1, 3], "y": [4, 5, 6]},
+    })
+
+
+def _rows(full):
+    keys = sorted(full)
+    return keys, sorted(zip(*[np.asarray(full[k]).tolist() for k in keys]))
+
+
+@pytest.mark.parametrize("rep", ["usr", "csr"])
+def test_pure_cross_product_full_join(db, rep):
+    q = JoinQuery((Atom.of("R", "x", "p"), Atom.of("U", "w"),
+                   Atom.of("V", "v")), prob_var="p")
+    engine = QueryEngine(db, rep=rep)
+    assert engine.join_size(q) == 3 * 2 * 1
+    keys, got = _rows(engine.full_join(q))
+    assert keys == ["p", "v", "w", "x"]
+    want = sorted((p, 7, w, x)
+                  for (x, p) in [(1, 0.5), (2, 0.2), (3, 0.9)]
+                  for w in [10, 20])
+    assert got == want
+
+
+@pytest.mark.parametrize("rep", ["usr", "csr"])
+def test_mixed_join_and_cross_product(db, rep):
+    # {R, S} join on x; U is a disjoint component multiplied in.
+    q = JoinQuery((Atom.of("R", "x", "p"), Atom.of("S", "x", "y"),
+                   Atom.of("U", "w")), prob_var="p")
+    engine = QueryEngine(db, rep=rep)
+    joined = [(x, p, y) for (x, p) in [(1, 0.5), (2, 0.2), (3, 0.9)]
+              for (xs, y) in [(1, 4), (1, 5), (3, 6)] if x == xs]
+    assert engine.join_size(q) == len(joined) * 2
+    keys, got = _rows(engine.full_join(q))
+    assert keys == ["p", "w", "x", "y"]
+    want = sorted((p, w, x, y) for (x, p, y) in joined for w in [10, 20])
+    assert got == want
+
+
+def test_cross_product_sampling_membership(db):
+    q = JoinQuery((Atom.of("R", "x", "p"), Atom.of("U", "w"),
+                   Atom.of("V", "v")), prob_var="p")
+    engine = QueryEngine(db)
+    full = engine.full_join(q)
+    names = tuple(sorted(full))
+    fullset = set(zip(*[np.asarray(full[k]).tolist() for k in names]))
+    total = 0
+    for seed in range(20):
+        smp = engine.sample(q, jax.random.key(seed), auto=True)
+        vmask = np.asarray(smp.valid())
+        got = list(zip(*[np.asarray(smp.columns[k])[vmask].tolist()
+                         for k in names]))
+        assert len(got) == int(smp.count)
+        assert all(t in fullset for t in got)
+        total += len(got)
+    # E[count per draw] = sum_x p(x) * |U| * |V| = 1.6 * 2 = 3.2
+    assert 0 < total < 20 * 6
+
+
+def test_cross_product_sampling_statistics(db):
+    q = JoinQuery((Atom.of("R", "x", "p"), Atom.of("U", "w")), prob_var="p")
+    engine = QueryEngine(db)
+    plan = engine.compile(q)
+    exp = plan.expected_k()
+    assert exp == pytest.approx((0.5 + 0.2 + 0.9) * 2)
+    cnts = [int(engine.sample(q, jax.random.key(i)).count) for i in range(80)]
+    from repro.core import estimate
+    sd = float(estimate.sample_std(plan.w, plan.p))
+    z = (np.mean(cnts) - exp) / (sd / 80 ** 0.5)
+    assert abs(z) < 4.5
+
+
+def test_empty_factor_annihilates(db):
+    db0 = Database.from_columns({
+        "R": {"x": [1, 2], "p": [0.5, 0.5]},
+        "E": {"e": np.zeros((0,), np.int64)},
+    })
+    q = JoinQuery((Atom.of("R", "x", "p"), Atom.of("E", "e")), prob_var="p")
+    engine = QueryEngine(db0)
+    assert engine.join_size(q) == 0
+    smp = engine.sample(q, jax.random.key(0))
+    assert int(smp.count) == 0 and not bool(smp.overflow)
+
+
+def test_cross_product_matches_direct_flatten(db):
+    q = JoinQuery((Atom.of("R", "x", "p"), Atom.of("U", "w")))
+    shred = build_shred(db, q, rep="both")
+    a = yannakakis.flatten(shred, rep="usr")
+    b = yannakakis.flatten(shred, rep="csr")
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    assert len(np.asarray(a["x"])) == 6

@@ -1,0 +1,426 @@
+"""Versioned snapshots + incremental reshred (DESIGN.md §11).
+
+(a) ``Database.apply``: versions increase monotonically, untouched
+    relations are shared by reference, malformed deltas are rejected;
+(b) ``reshred_incremental`` is bit-identical to a from-scratch shred of
+    the post-delta snapshot — property-tested over random deltas
+    (inserts, deletes of chained rows, multi-relation batches) for both
+    representations, plus chained delta sequences;
+(c) ``QueryEngine.apply_delta`` upgrades warm cache entries: zero shred
+    rebuilds, zero plan recompiles, zero retraces for shape-preserving
+    deltas (CacheStats + jit-cache introspection), across single-draw,
+    batched, and sharded sampling — while ``rebind`` with an identical
+    schema still invalidates (the documented contract);
+(d) stacked indexes re-partition only shards whose rows changed
+    (``reshard_incremental`` per-shard reuse).
+"""
+import numpy as np
+import jax
+import pytest
+
+from _optional import given, settings, st  # hypothesis, or skip shims
+
+from repro.core import Atom, Database, JoinQuery, build_shred
+from repro.core.delta import DeltaBatch, RelationDelta
+from repro.core.distributed import build_stacked, reshard_incremental
+from repro.core.shred import reshred_incremental
+from repro.engine import QueryEngine, ShardedPlan
+
+
+def _db(seed=11, nr=90, ns=140, nt=60):
+    rng = np.random.default_rng(seed)
+    return Database.from_columns({
+        "R": {"x": rng.integers(0, 12, nr), "p": rng.random(nr) * 0.5},
+        "S": {"x": rng.integers(0, 12, ns), "y": rng.integers(0, 9, ns)},
+        "T": {"y": rng.integers(0, 9, nt), "z": np.arange(nt)},
+    })
+
+
+Q3 = JoinQuery((Atom.of("R", "x", "p"), Atom.of("S", "x", "y"),
+                Atom.of("T", "y", "z")), prob_var="p")
+
+
+def _random_delta(db, seed, max_ins=6, max_del=5):
+    """A random multi-relation DeltaBatch: per-relation inserts (new and
+    existing key values) and deletes (uniform row choice — chained rows,
+    group heads, and singletons all get hit across seeds)."""
+    rng = np.random.default_rng(seed)
+    spec = {}
+    gens = {
+        "R": lambda k: {"x": rng.integers(0, 15, k), "p": rng.random(k)},
+        "S": lambda k: {"x": rng.integers(0, 15, k),
+                        "y": rng.integers(0, 11, k)},
+        "T": lambda k: {"y": rng.integers(0, 11, k),
+                        "z": rng.integers(0, 99, k)},
+    }
+    for name in db.relations:
+        if rng.random() < 0.25:
+            continue  # leave this relation untouched
+        n = db.relations[name].num_rows
+        ins = int(rng.integers(0, max_ins + 1))
+        dele = int(rng.integers(0, min(max_del, n) + 1))
+        if ins == 0 and dele == 0:
+            continue
+        s = {}
+        if ins:
+            s["insert"] = gens[name](ins)
+        if dele:
+            s["delete"] = rng.choice(n, size=dele, replace=False)
+        spec[name] = s
+    if not spec:  # guarantee a non-empty batch
+        spec["S"] = {"insert": gens["S"](1)}
+    return DeltaBatch.of(**spec)
+
+
+def assert_shreds_bit_identical(a, b):
+    la, ta = jax.tree.flatten(a)
+    lb, tb = jax.tree.flatten(b)
+    assert ta == tb, "pytree structure differs"
+    for x, y in zip(la, lb):
+        assert x.dtype == y.dtype, (x.dtype, y.dtype)
+        assert x.shape == y.shape, (x.shape, y.shape)
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# -- (a) Database.apply ------------------------------------------------------
+
+def test_apply_versions_and_sharing():
+    db = _db()
+    assert db.version == 0
+    delta = DeltaBatch.of(S={"insert": {"x": [1], "y": [2]}})
+    db1 = db.apply(delta)
+    assert db1.version == 1 and db.version == 0  # immutable snapshots
+    # untouched relations shared by reference, touched ones replaced
+    assert db1.relations["R"] is db.relations["R"]
+    assert db1.relations["T"] is db.relations["T"]
+    assert db1.relations["S"] is not db.relations["S"]
+    assert db1.relations["S"].num_rows == db.relations["S"].num_rows + 1
+    assert db1.apply(delta).version == 2
+
+
+def test_apply_layout_is_survivors_then_inserts():
+    db = Database.from_columns({"A": {"k": [10, 11, 12, 13]}})
+    db1 = db.apply(DeltaBatch.of(A={"delete": [1], "insert": {"k": [99]}}))
+    np.testing.assert_array_equal(
+        np.asarray(db1.relations["A"].column("k")), [10, 12, 13, 99])
+
+
+def test_apply_validation():
+    db = Database.from_columns({"A": {"k": [1, 2], "v": [3, 4]}})
+    with pytest.raises(KeyError, match="unknown"):
+        db.apply(DeltaBatch.of(B={"delete": [0]}))
+    with pytest.raises(ValueError, match="schema"):
+        db.apply(DeltaBatch.of(A={"insert": {"k": [1]}}))  # missing column v
+    with pytest.raises(ValueError, match="ragged"):
+        db.apply(DeltaBatch.of(A={"insert": {"k": [1], "v": [2, 3]}}))
+    with pytest.raises(ValueError, match="delete_mask"):
+        db.apply(DeltaBatch(
+            {"A": RelationDelta(delete_mask=np.zeros(5, np.bool_))}))
+    with pytest.raises(ValueError, match="at least one relation"):
+        DeltaBatch({})
+    with pytest.raises(ValueError, match="empty"):
+        db.apply(DeltaBatch({"A": RelationDelta()}))
+    with pytest.raises(ValueError, match="out of range"):
+        db.apply(DeltaBatch.of(A={"delete": [-1]}))  # no numpy wraparound
+    with pytest.raises(ValueError, match="out of range"):
+        db.apply(DeltaBatch.of(A={"delete": [2]}))
+    with pytest.raises(ValueError, match="duplicate"):
+        db.apply(DeltaBatch.of(A={"delete": [0, 0]}))
+
+
+# -- (b) reshred bit-identity ------------------------------------------------
+
+@pytest.mark.parametrize("rep", ["usr", "csr", "both"])
+def test_reshred_incremental_bit_identical_seeded(rep):
+    db = _db()
+    base = build_shred(db, Q3, rep=rep)
+    for seed in range(12):
+        delta = _random_delta(db, seed)
+        inc = reshred_incremental(base, db, Q3, delta)
+        scratch = build_shred(db.apply(delta), Q3, rep=rep)
+        assert_shreds_bit_identical(inc, scratch)
+
+
+@pytest.mark.parametrize("rep", ["usr", "csr"])
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10**9))
+def test_reshred_incremental_bit_identical_property(rep, seed):
+    db = _db()
+    base = build_shred(db, Q3, rep=rep)
+    delta = _random_delta(db, seed, max_ins=8, max_del=8)
+    assert_shreds_bit_identical(
+        reshred_incremental(base, db, Q3, delta),
+        build_shred(db.apply(delta), Q3, rep=rep))
+
+
+def test_reshred_delete_chained_rows_csr():
+    """Deleting rows in the middle/head of CSR same-key chains relinks the
+    survivors exactly like a rebuild."""
+    db = Database.from_columns({
+        "R": {"x": [5, 5, 5], "p": [0.5, 0.5, 0.5]},
+        "S": {"x": [5, 5, 5, 5, 5, 7], "y": [0, 1, 2, 3, 4, 5]},
+    })
+    q = JoinQuery((Atom.of("R", "x", "p"), Atom.of("S", "x", "y")),
+                  prob_var="p")
+    base = build_shred(db, q, rep="csr")
+    for rows in ([0], [2], [4], [0, 2, 4], [1, 3]):  # head, middle, tail
+        delta = DeltaBatch.of(S={"delete": rows})
+        assert_shreds_bit_identical(
+            reshred_incremental(base, db, q, delta),
+            build_shred(db.apply(delta), q, rep="csr"))
+
+
+def test_reshred_chained_deltas():
+    """A lineage of deltas merged one-by-one tracks from-scratch builds."""
+    db = _db(seed=3)
+    cur = build_shred(db, Q3, rep="both")
+    for seed in range(6):
+        delta = _random_delta(db, 1000 + seed)
+        cur = reshred_incremental(cur, db, Q3, delta)
+        db = db.apply(delta)
+        assert_shreds_bit_identical(cur, build_shred(db, Q3, rep="both"))
+
+
+def test_reshred_untouched_query_returns_base():
+    db = Database.from_columns({
+        "R": {"x": [1, 2], "p": [0.5, 0.5]}, "S": {"x": [1], "y": [3]},
+        "Unrelated": {"w": [9]},
+    })
+    q = JoinQuery((Atom.of("R", "x", "p"), Atom.of("S", "x", "y")),
+                  prob_var="p")
+    base = build_shred(db, q)
+    delta = DeltaBatch.of(Unrelated={"insert": {"w": [1]}})
+    assert reshred_incremental(base, db, q, delta) is base
+
+
+def test_reshred_multicolumn_join_keys():
+    rng = np.random.default_rng(5)
+    db = Database.from_columns({
+        "R": {"a": rng.integers(0, 6, 40), "b": rng.integers(0, 6, 40),
+              "p": rng.random(40)},
+        "S": {"a": rng.integers(0, 6, 70), "b": rng.integers(0, 6, 70),
+              "c": np.arange(70)},
+    })
+    q = JoinQuery((Atom.of("R", "a", "b", "p"), Atom.of("S", "a", "b", "c")),
+                  prob_var="p")
+    base = build_shred(db, q, rep="both")
+    for seed in range(6):
+        r2 = np.random.default_rng(seed)
+        delta = DeltaBatch.of(S={
+            "insert": {"a": r2.integers(0, 8, 4), "b": r2.integers(0, 8, 4),
+                       "c": r2.integers(0, 9, 4)},
+            "delete": r2.choice(70, 5, replace=False)})
+        assert_shreds_bit_identical(
+            reshred_incremental(base, db, q, delta),
+            build_shred(db.apply(delta), q, rep="both"))
+
+
+def test_reshred_cross_product_edge():
+    db = Database.from_columns({
+        "R": {"x": [1, 2, 3], "p": [0.5, 0.2, 0.9]},
+        "U": {"w": [10, 20, 30]},
+    })
+    q = JoinQuery((Atom.of("R", "x", "p"), Atom.of("U", "w")), prob_var="p")
+    base = build_shred(db, q, rep="both")
+    delta = DeltaBatch.of(U={"insert": {"w": [40, 50]}, "delete": [1]},
+                          R={"insert": {"x": [4], "p": [0.1]}})
+    assert_shreds_bit_identical(
+        reshred_incremental(base, db, q, delta),
+        build_shred(db.apply(delta), q, rep="both"))
+
+
+# -- (c) engine cache contract ----------------------------------------------
+
+def _shape_preserving_delta():
+    """2 in / 2 out on S: every cached array keeps its shape, so warm draws
+    must reuse the existing traces."""
+    return DeltaBatch.of(S={"insert": {"x": [3, 7], "y": [1, 2]},
+                            "delete": [0, 1]})
+
+
+def test_apply_delta_zero_rebuilds_zero_retraces():
+    db = _db()
+    engine = QueryEngine(db)
+    key = jax.random.key(0)
+    engine.sample(Q3, key)
+    engine.sample_batch(Q3, jax.random.split(key, 4))
+    plan = engine.compile(Q3)
+    st0 = engine.stats.snapshot()
+    introspect = hasattr(plan._jit, "_cache_size")
+    if introspect:
+        t_single = plan._jit._cache_size()
+        t_batched = plan._batched_jit._cache_size()
+
+    engine.apply_delta(_shape_preserving_delta())
+    assert engine.db.version == 1
+    engine.sample(Q3, jax.random.key(1))
+    engine.sample_batch(Q3, jax.random.split(jax.random.key(2), 4))
+
+    st1 = engine.stats
+    assert st1.shred_builds == st0.shred_builds, \
+        "warm draws after apply_delta must not rebuild the shred"
+    assert st1.plan_misses == st0.plan_misses, \
+        "warm draws after apply_delta must not recompile the plan"
+    assert st1.shred_upgrades >= 1 and st1.plan_upgrades >= 1
+    assert engine.compile(Q3) is plan, "plan object survives the upgrade"
+    if introspect:
+        assert plan._jit._cache_size() == t_single, \
+            "shape-preserving delta must not retrace the single-draw executor"
+        assert plan._batched_jit._cache_size() == t_batched, \
+            "shape-preserving delta must not retrace the batched executor"
+
+
+def test_apply_delta_samples_match_fresh_engine():
+    db = _db()
+    engine = QueryEngine(db)
+    key = jax.random.key(7)
+    engine.sample(Q3, key)  # warm the cache pre-delta
+    for seed in range(3):
+        delta = _random_delta(db, 40 + seed)
+        engine.apply_delta(delta)
+        db = db.apply(delta)
+    fresh = QueryEngine(db)
+    plan = engine.compile(Q3)
+    a = engine.sample(Q3, key)
+    b = fresh.sample(Q3, key, cap=plan.default_capacity(),
+                     acap=plan.arrival_capacity())
+    np.testing.assert_array_equal(np.asarray(a.positions),
+                                  np.asarray(b.positions))
+    for v in b.columns:
+        np.testing.assert_array_equal(np.asarray(a.columns[v]),
+                                      np.asarray(b.columns[v]))
+    assert engine.join_size(Q3) == fresh.join_size(Q3)
+    full_a, full_b = engine.full_join(Q3), fresh.full_join(Q3)
+    for v in full_b:
+        np.testing.assert_array_equal(np.asarray(full_a[v]),
+                                      np.asarray(full_b[v]))
+
+
+def test_apply_delta_untouched_query_rekeyed_free():
+    db = _db()
+    engine = QueryEngine(db)
+    q_free = JoinQuery((Atom.of("T", "y", "z"),))  # delta never touches T
+    engine.full_join(q_free)
+    engine.sample(Q3, jax.random.key(0))
+    st0 = engine.stats.snapshot()
+    engine.apply_delta(_shape_preserving_delta())  # touches S only
+    engine.full_join(q_free)
+    st1 = engine.stats
+    assert st1.shred_builds == st0.shred_builds
+    # Only the touched query's entries did upgrade work.
+    assert st1.shred_upgrades == st0.shred_upgrades + 1
+    assert st1.plan_upgrades == st0.plan_upgrades + 1
+
+
+def test_rebind_still_invalidates_identical_schema():
+    """The documented contract: rebind ALWAYS invalidates, even for an
+    identical schema fingerprint — apply_delta is the warm path."""
+    db = _db()
+    engine = QueryEngine(db)
+    engine.sample(Q3, jax.random.key(0))
+    assert len(engine._plans) == 1 and len(engine._shreds) == 1
+    st0 = engine.stats.snapshot()
+    engine.rebind(_db())  # same seed: byte-identical data, same schema
+    assert len(engine._plans) == 0 and len(engine._shreds) == 0
+    engine.sample(Q3, jax.random.key(0))
+    assert engine.stats.shred_builds == st0.shred_builds + 1
+    assert engine.stats.plan_misses == st0.plan_misses + 1
+
+
+def test_apply_delta_sharded_zero_rebuilds():
+    db = _db(nr=96)
+    engine = QueryEngine(db)
+    mesh = jax.make_mesh((len(jax.devices()),), ("data",))
+    plan = engine.compile_sharded(Q3, mesh, axes=("data",))
+    assert isinstance(plan, ShardedPlan)
+    key = jax.random.key(3)
+    engine.sample(Q3, key, mesh=mesh, axes=("data",))
+    engine.sample_batch(Q3, jax.random.split(key, 4), mesh=mesh,
+                        axes=("data",))
+    st0 = engine.stats.snapshot()
+    n_samplers = len(plan._samplers) + len(plan._batched_samplers)
+
+    engine.apply_delta(_shape_preserving_delta())
+    a = engine.sample(Q3, key, mesh=mesh, axes=("data",))
+    engine.sample_batch(Q3, jax.random.split(key, 4), mesh=mesh,
+                        axes=("data",))
+    st1 = engine.stats
+    assert st1.shred_builds == st0.shred_builds, \
+        "warm sharded draws after apply_delta must not rebuild the stack"
+    assert st1.plan_misses == st0.plan_misses
+    assert st1.shards_reused + st1.shards_rebuilt == plan.num_shards
+    # shape-preserving + sticky capacities: the shard_map executors are the
+    # same cached callables (no new (cap, acap) entries)
+    assert len(plan._samplers) + len(plan._batched_samplers) == n_samplers
+    # correctness against a cold engine on the applied snapshot
+    fresh = QueryEngine(db.apply(_shape_preserving_delta()))
+    b = fresh.sample(Q3, key, mesh=mesh, axes=("data",), cap=plan.cap,
+                     acap=plan.acap)
+    np.testing.assert_array_equal(np.asarray(a.positions),
+                                  np.asarray(b.positions))
+
+
+def test_stacked_repartitions_only_changed_shards():
+    """Core-level per-shard reuse: a delta confined to the tail of the root
+    block layout rebuilds the tail shard only (DESIGN.md §11)."""
+    db = _db(nr=96)
+    stacked, base = build_stacked(db, Q3, 4)
+    # Replace two tail-block root rows with rows whose x values already
+    # occur elsewhere: the semijoin filter output and every non-tail block
+    # are unchanged.
+    xs = np.asarray(db.relations["R"].column("x"))
+    delta = DeltaBatch.of(R={"insert": {"x": xs[:2], "p": [0.1, 0.2]},
+                             "delete": [90, 91]})
+    new_stacked, new_base, reused, rebuilt = reshard_incremental(
+        stacked, base, db.apply(delta), Q3, 4)
+    assert reused == 3 and rebuilt == 1
+    want, _ = build_stacked(db.apply(delta), Q3, 4)
+    assert_shreds_bit_identical(new_stacked.shred, want.shred)
+    np.testing.assert_array_equal(np.asarray(new_stacked.prefE),
+                                  np.asarray(want.prefE))
+    assert new_stacked.join_sizes == want.join_sizes
+    # a child delta invalidates the shared children: every shard rebuilds
+    delta2 = _shape_preserving_delta()
+    s2, _, reused2, rebuilt2 = reshard_incremental(
+        new_stacked, new_base, db.apply(delta).apply(delta2), Q3, 4)
+    assert reused2 == 0 and rebuilt2 == 4
+    want2, _ = build_stacked(db.apply(delta).apply(delta2), Q3, 4)
+    assert_shreds_bit_identical(s2.shred, want2.shred)
+
+
+def test_stacked_reuse_survives_unrelated_relation_delta():
+    """A delta that ALSO touches a relation outside the query (another
+    tenant's table) must not defeat per-shard reuse."""
+    rng = np.random.default_rng(11)
+    db = Database.from_columns({
+        "R": {"x": rng.integers(0, 12, 96), "p": rng.random(96) * 0.5},
+        "S": {"x": rng.integers(0, 12, 140), "y": rng.integers(0, 9, 140)},
+        "T": {"y": rng.integers(0, 9, 60), "z": np.arange(60)},
+        "Other": {"w": np.arange(30)},
+    })
+    stacked, base = build_stacked(db, Q3, 4)
+    xs = np.asarray(db.relations["R"].column("x"))
+    delta = DeltaBatch.of(
+        R={"insert": {"x": xs[:2], "p": [0.1, 0.2]}, "delete": [90, 91]},
+        Other={"delete": [0]})
+    new_stacked, _, reused, rebuilt = reshard_incremental(
+        stacked, base, db.apply(delta), Q3, 4)
+    assert reused == 3 and rebuilt == 1
+    want, _ = build_stacked(db.apply(delta), Q3, 4)
+    assert_shreds_bit_identical(new_stacked.shred, want.shred)
+
+
+def test_explain_and_cache_info_report_versions():
+    db = _db()
+    engine = QueryEngine(db)
+    engine.sample(Q3, jax.random.key(0))
+    info = engine.cache_info()
+    assert info["db_version"] == 0
+    assert all(e["version"] == 0 for e in info["shreds"] + info["plans"])
+    engine.apply_delta(_shape_preserving_delta())
+    info = engine.cache_info()
+    assert info["db_version"] == 1
+    assert all(e["version"] == 1 for e in info["shreds"] + info["plans"])
+    out = engine.explain(Q3)
+    assert "db version=1" in out
+    assert "upgrades" in out

@@ -103,3 +103,53 @@ class TestReroot:
 def test_prob_var_validation():
     with pytest.raises(ValueError):
         q(Atom.of("R", "a"), prob="nope")
+
+
+class TestDisjointAtoms:
+    """Cross products are *deliberately* acyclic: disjoint atoms become
+    keyless (single-group) edges of the join tree — supported end-to-end
+    through shred/GET (tests/test_cross_product.py)."""
+
+    def test_two_disjoint_atoms_acyclic(self):
+        query = q(Atom.of("R", "x"), Atom.of("U", "w"))
+        assert is_acyclic(query)
+        tree = gyo_join_tree(query)
+        assert {n.atom.name for n in tree.nodes()} == {"R", "U"}
+        assert _connected(tree)
+
+    def test_three_disjoint_atoms_chain_deterministically(self):
+        query = q(Atom.of("R", "x"), Atom.of("U", "w"), Atom.of("V", "v"))
+        t1 = gyo_join_tree(query)
+        t2 = gyo_join_tree(query)
+        assert [n.atom.name for n in t1.nodes()] == \
+            [n.atom.name for n in t2.nodes()]
+
+    def test_two_joined_components(self):
+        # {R, S} joined on b; {U, V} joined on w; no variable across.
+        query = q(Atom.of("R", "a", "b"), Atom.of("S", "b", "c"),
+                  Atom.of("U", "w"), Atom.of("V", "w", "z"))
+        assert is_acyclic(query)
+        assert _connected(gyo_join_tree(query))
+
+    def test_reroot_across_components(self):
+        query = q(Atom.of("R", "a", "p"), Atom.of("U", "w"), prob="p")
+        tree = gyo_join_tree(query)
+        rr = reroot_for(tree, "p")
+        assert rr.atom.name == "R"
+        assert {n.atom.name for n in rr.nodes()} == {"R", "U"}
+
+    def test_cyclic_component_not_masked_by_disjoint_atom(self):
+        # A triangle stays cyclic no matter how many disjoint atoms the
+        # vacuous ear check could eliminate first.
+        triangle = (Atom.of("A", "x", "y"), Atom.of("B", "y", "z"),
+                    Atom.of("C", "z", "x"))
+        assert not is_acyclic(q(*triangle))
+        assert not is_acyclic(q(*triangle, Atom.of("U", "w")))
+        assert not is_acyclic(q(Atom.of("U", "w"), *triangle,
+                                Atom.of("V", "v")))
+
+    def test_acyclic_component_plus_cyclic_component(self):
+        query = q(Atom.of("R", "a", "b"), Atom.of("S", "b", "c"),
+                  Atom.of("A", "x", "y"), Atom.of("B", "y", "z"),
+                  Atom.of("C", "z", "x"))
+        assert not is_acyclic(query)

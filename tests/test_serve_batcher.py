@@ -16,9 +16,10 @@ import jax
 import pytest
 
 from repro.core import Atom, Database, JoinQuery
+from repro.core.delta import DeltaBatch
 from repro.engine import QueryEngine
 from repro.launch.serve import (
-    JoinSampleRequest, MicroBatcher, serve_join_samples,
+    JoinSampleRequest, MicroBatcher, UpdateRequest, serve_join_samples,
 )
 
 
@@ -132,3 +133,90 @@ def test_serve_join_samples_drains_everything(db, q3, q2):
 def test_max_batch_validation(db):
     with pytest.raises(ValueError, match="max_batch"):
         MicroBatcher(QueryEngine(db), max_batch=0)
+
+
+# -- (d) update requests interleaved with draws (DESIGN.md §11) --------------
+
+def _delta():
+    return DeltaBatch.of(S={"insert": {"x": [3, 7], "y": [1, 2]},
+                            "delete": [0, 1]})
+
+
+def test_update_barrier_flushes_pending_draws_on_old_snapshot(db, q3):
+    """An update drains the pending batch against the pre-delta snapshot
+    first: in-flight draws never mix versions."""
+    engine = QueryEngine(db)
+    mb = MicroBatcher(engine, max_batch=100, max_wait_ms=1e9,
+                      clock=FakeClock())
+    r_before = [JoinSampleRequest(query=q3, seed=i) for i in range(3)]
+    for r in r_before:
+        mb.submit(r)
+    done = mb.submit(UpdateRequest(_delta()))
+    # barrier: the 3 pending draws completed BEFORE the delta applied...
+    assert [id(x) for x in done[:3]] == [id(r) for r in r_before]
+    assert all(r.db_version == 0 for r in r_before)
+    # ...and the update itself is reported completed with the new version
+    assert isinstance(done[3], UpdateRequest)
+    assert done[3].applied_version == 1 and engine.db.version == 1
+    # draws submitted after the update read the new snapshot
+    r_after = JoinSampleRequest(query=q3, seed=50)
+    mb.submit(r_after)
+    mb.flush()
+    assert r_after.db_version == 1
+    assert mb.updates_applied == 1
+
+
+def test_update_between_flushes_zero_rebuilds(db, q3):
+    """Warm flushes around an update: the upgraded plan serves the next
+    batch with zero shred rebuilds and zero recompiles."""
+    engine = QueryEngine(db)
+    mb = MicroBatcher(engine, max_batch=4, max_wait_ms=1e9, clock=FakeClock())
+    for i in range(4):
+        mb.submit(JoinSampleRequest(query=q3, seed=i))  # cold flush
+    st0 = engine.stats.snapshot()
+    mb.submit(UpdateRequest(_delta()))
+    for i in range(4):
+        mb.submit(JoinSampleRequest(query=q3, seed=10 + i))  # warm flush
+    st1 = engine.stats
+    assert st1.shred_builds == st0.shred_builds
+    assert st1.plan_misses == st0.plan_misses
+    assert st1.shred_upgrades >= 1 and st1.plan_upgrades >= 1
+
+
+def test_update_results_match_engine_on_applied_snapshot(db, q3):
+    """Draws after the barrier equal a cold engine bound to db.apply(delta)
+    under the same seeds (the batch really reads the new snapshot)."""
+    engine = QueryEngine(db)
+    mb = MicroBatcher(engine, max_batch=100, max_wait_ms=1e9,
+                      clock=FakeClock())
+    mb.submit(JoinSampleRequest(query=q3, seed=0))
+    mb.submit(UpdateRequest(_delta()))
+    reqs = [JoinSampleRequest(query=q3, seed=20 + i) for i in range(3)]
+    for r in reqs:
+        mb.submit(r)
+    mb.flush()
+    ref = QueryEngine(db.apply(_delta()))
+    for r in reqs:
+        want = ref.sample(q3, jax.random.key(r.seed))
+        assert r.count == int(want.count)
+        assert r.overflow == bool(want.overflow)
+
+
+def test_serve_join_samples_with_interleaved_updates(db, q3, q2):
+    """The closed-loop entry point serves a mixed draw/update stream in
+    arrival order without corrupting any batch."""
+    engine = QueryEngine(db)
+    stream = []
+    for i in range(9):
+        stream.append(JoinSampleRequest(query=q3 if i % 2 else q2, seed=i))
+        if i % 4 == 3:
+            stream.append(UpdateRequest(_delta()))
+    done = serve_join_samples(engine, stream, max_batch=4)
+    assert sorted(id(r) for r in done) == sorted(id(r) for r in stream)
+    draws = [r for r in stream if isinstance(r, JoinSampleRequest)]
+    assert all(r.count is not None and r.db_version is not None
+               for r in draws)
+    assert engine.db.version == 2
+    # versions are monotone in arrival order
+    versions = [r.db_version for r in draws]
+    assert versions == sorted(versions)

@@ -9,10 +9,14 @@ baselined suite:
     are informational — cache stats, speedup summaries — and skipped);
   * the gate metric is the MEDIAN of per-row ratios ``csv_us / base_us``
     (robust to one noisy row, scale-free across row magnitudes);
-  * the gate fails when the median ratio exceeds ``1 + threshold``
-    (default 0.30: a >30% median slowdown), when a baselined suite is
-    missing from the CSV (a silently-dropped suite is itself a
-    regression), or when fewer than half the baseline rows matched.
+  * the gate fails with exit code 1 when the median ratio exceeds
+    ``1 + threshold`` (default 0.30: a >30% median slowdown);
+  * it fails with the distinct exit code 3 when a baselined suite is
+    missing from the CSV or fewer than half its baseline rows matched —
+    a renamed/dropped suite is a *coverage* failure, not a perf
+    regression, and needs a baseline refresh (or the rename reverted),
+    not an optimization hunt. When both failures occur in one run, the
+    regression verdict (exit 1) wins; all failures are printed either way.
 
 Baselines are absolute wall times, so they are only comparable on the
 machine class that recorded them — refresh them from the runner class
@@ -35,6 +39,8 @@ import sys
 from pathlib import Path
 
 DEFAULT_THRESHOLD = 0.30
+EXIT_REGRESSED = 1
+EXIT_MISSING_SUITE = 3  # baselined suite/rows absent from the fresh run
 
 
 def parse_csv(path: Path):
@@ -75,18 +81,23 @@ def check(suites, baselines, threshold: float) -> int:
         print("check_bench: no BENCH_*.json baselines committed; "
               "nothing to gate", file=sys.stderr)
         return 0
-    failures = []
+    regressions, missing = [], []
     for suite, (path, base_rows) in baselines.items():
         if suite not in suites:
-            failures.append(f"{suite}: baselined suite missing from the CSV "
-                            f"(was it dropped from the bench run?)")
+            missing.append(
+                f"{suite}: baselined suite missing from the CSV — was it "
+                f"renamed or dropped from benchmarks/run.py? Either revert "
+                f"the rename, or re-record with "
+                f"`check_bench.py --csv <csv> --update {suite}` and delete "
+                f"the stale {path.name}")
             continue
         csv_rows = suites[suite]
         shared = sorted(set(base_rows) & set(csv_rows))
         if len(shared) * 2 < len(base_rows):
-            failures.append(
+            missing.append(
                 f"{suite}: only {len(shared)}/{len(base_rows)} baseline rows "
-                f"present in the CSV (renamed rows? refresh {path.name})")
+                f"present in the CSV — renamed rows? refresh {path.name} "
+                f"with `check_bench.py --csv <csv> --update {suite}`")
             continue
         ratios = [csv_rows[r] / base_rows[r] for r in shared
                   if base_rows[r] > 0]
@@ -99,13 +110,18 @@ def check(suites, baselines, threshold: float) -> int:
                            reverse=True)[:5]
             detail = "; ".join(
                 f"{r} {base_rows[r]:.0f}->{csv_rows[r]:.0f}us" for r in worst)
-            failures.append(f"{suite}: median ratio {med:.3f} > "
-                            f"{1 + threshold:.2f} (worst: {detail})")
-    if failures:
+            regressions.append(f"{suite}: median ratio {med:.3f} > "
+                               f"{1 + threshold:.2f} (worst: {detail})")
+    if regressions or missing:
         print("check_bench: FAILED", file=sys.stderr)
-        for f in failures:
+        for f in regressions + missing:
             print(f"  {f}", file=sys.stderr)
-        return 1
+        # Coverage failures (missing suites/rows) get their own exit code so
+        # CI and humans can tell "slower" from "not measured at all" — but a
+        # confirmed regression is the more severe verdict and wins when both
+        # occur (otherwise the exit-3 "refresh baselines" playbook would
+        # bake the regressed numbers into the new baseline).
+        return EXIT_REGRESSED if regressions else EXIT_MISSING_SUITE
     return 0
 
 
