@@ -1,0 +1,84 @@
+"""Fused Pallas tree-probe GET vs the per-node USR walk vs the CSR chain
+walk (DESIGN.md §4 "Fused GET").
+
+Two regimes, both over a STATS-like 3-deep chain (the shape where the
+per-node path's ~3·depth ops hurt most):
+
+* **dispatch-bound** (``eager`` rows) — op-by-op GET on a small probe
+  batch, the serving regime where host dispatch overhead dominates: the
+  per-node USR path issues one searchsorted plus perm/child_start/child_w
+  gathers *per tree node*, while the fused path is ONE kernel launch over
+  the packed arena (plus tiling glue). This is the regime the tentpole
+  targets and the row the acceptance criterion reads.
+* **compute-bound** (``jit`` rows) — the whole GET jitted into one
+  dispatch per call; measures pure op cost at a larger probe batch.
+
+A batched ``(B, cap)`` row exercises the vmapped fused kernel the engine's
+multi-draw executor uses (DESIGN.md §10). ``--tiny`` shrinks every size
+(CI bench-smoke); the committed BENCH_probe.json baseline is gated by
+tools/check_bench.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_shred, get
+from repro.core.probe import usr_get_rows, usr_get_rows_fused
+
+from .timing import row, time_fn, tiny
+from .workloads import stats_like
+
+SCALE = 3000
+K_DISPATCH = 512    # dispatch-bound probe batch
+K_COMPUTE = 1 << 14  # compute-bound probe batch
+BATCH = 16
+
+
+def run(out):
+    scale = 300 if tiny() else SCALE
+    k_d = 128 if tiny() else K_DISPATCH
+    k_c = (1 << 10) if tiny() else K_COMPUTE
+    batch = 4 if tiny() else BATCH
+
+    db, q = stats_like(0, scale)
+    shred = build_shred(db, q, rep="both")
+    n = int(shred.join_size)
+    assert shred.packed is not None, "workload must narrow to int32"
+    depth = len(shred.packed.layout.names)
+
+    def pos_of(k, seed=1):
+        return jax.random.randint(jax.random.key(seed), (k,), 0, n
+                                  ).astype(jnp.int64)
+
+    # -- dispatch-bound: eager op-by-op GET ---------------------------------
+    pos_d = pos_of(k_d)
+    us_usr_e = time_fn(lambda: jax.block_until_ready(
+        usr_get_rows(shred, pos_d)))
+    us_fus_e = time_fn(lambda: jax.block_until_ready(
+        usr_get_rows_fused(shred, pos_d)))
+    out(row(f"probe/eager-usr/k={k_d}", us_usr_e,
+            f"|Q|={n};depth={depth}"))
+    out(row(f"probe/eager-fused/k={k_d}", us_fus_e,
+            f"usr/fused={us_usr_e / us_fus_e:.2f}x"))
+
+    # -- compute-bound: one jitted dispatch per GET -------------------------
+    pos_c = pos_of(k_c)
+    us_usr = time_fn(jax.jit(lambda p: get(shred, p, rep="usr")), pos_c)
+    us_fus = time_fn(jax.jit(lambda p: get(shred, p, rep="usr_fused")), pos_c)
+    us_csr = time_fn(jax.jit(lambda p: get(shred, p, rep="csr")), pos_c)
+    out(row(f"probe/jit-usr/k={k_c}", us_usr))
+    out(row(f"probe/jit-fused/k={k_c}", us_fus,
+            f"usr/fused={us_usr / us_fus:.2f}x"))
+    out(row(f"probe/jit-csr/k={k_c}", us_csr,
+            f"csr/fused={us_csr / us_fus:.2f}x"))
+
+    # -- batched (B, cap): the vmapped shape of the multi-draw executor -----
+    pos_b = jnp.stack([pos_of(k_d, s) for s in range(batch)])
+    us_usr_b = time_fn(jax.jit(jax.vmap(
+        lambda p: get(shred, p, rep="usr"))), pos_b)
+    us_fus_b = time_fn(jax.jit(jax.vmap(
+        lambda p: get(shred, p, rep="usr_fused"))), pos_b)
+    out(row(f"probe/batched-usr/B={batch}", us_usr_b))
+    out(row(f"probe/batched-fused/B={batch}", us_fus_b,
+            f"usr/fused={us_usr_b / us_fus_b:.2f}x"))

@@ -28,14 +28,16 @@ def main() -> None:
         os.environ["REPRO_BENCH_TINY"] = "1"
 
     from . import (bench_position_sampling, bench_uniform_e2e, bench_poisson,
-                   bench_build_probe, bench_full_join, bench_qc,
-                   bench_caching, bench_engine_cache, bench_sharded_engine,
-                   bench_throughput, bench_updates, bench_kernels, roofline)
+                   bench_build_probe, bench_probe_fused, bench_full_join,
+                   bench_qc, bench_caching, bench_engine_cache,
+                   bench_sharded_engine, bench_throughput, bench_updates,
+                   bench_kernels, roofline)
     suites = [
         ("fig7_position_sampling", bench_position_sampling.run),
         ("fig8_uniform_e2e", bench_uniform_e2e.run),
         ("fig9_poisson", bench_poisson.run),
         ("table3_build_probe", bench_build_probe.run),
+        ("probe", bench_probe_fused.run),
         ("table4_full_join", bench_full_join.run),
         ("fig10_qc", bench_qc.run),
         ("table6_caching", bench_caching.run),

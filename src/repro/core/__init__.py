@@ -29,8 +29,10 @@ from .relations import Relation, pack_keys, dense_keys  # noqa: E402
 from .database import Database  # noqa: E402
 from .delta import DeltaBatch, RelationDelta  # noqa: E402
 from .jointree import Atom, JoinQuery, gyo_join_tree, is_acyclic, reroot_for  # noqa: E402
-from .shred import Shred, ShredNode, build_shred, build_plan, reshred_incremental  # noqa: E402
-from .probe import get, get_rows, csr_get_rows, usr_get_rows  # noqa: E402
+from .shred import (Shred, ShredNode, build_shred, build_plan,  # noqa: E402
+                    reshred_incremental, PackedShred, pack_arena)
+from .probe import (get, get_rows, csr_get_rows, usr_get_rows,  # noqa: E402
+                    usr_get_rows_fused)
 from . import sampling, estimate, yannakakis  # noqa: E402
 from .poisson import PoissonSampler, JoinSample  # noqa: E402
 
@@ -38,7 +40,8 @@ __all__ = [
     "Relation", "Database", "DeltaBatch", "RelationDelta", "Atom",
     "JoinQuery", "gyo_join_tree", "is_acyclic",
     "reroot_for", "Shred", "ShredNode", "build_shred", "build_plan",
-    "reshred_incremental", "get",
-    "get_rows", "csr_get_rows", "usr_get_rows", "sampling", "estimate",
+    "reshred_incremental", "PackedShred", "pack_arena", "get",
+    "get_rows", "csr_get_rows", "usr_get_rows", "usr_get_rows_fused",
+    "sampling", "estimate",
     "yannakakis", "PoissonSampler", "JoinSample", "pack_keys", "dense_keys",
 ]

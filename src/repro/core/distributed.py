@@ -40,7 +40,7 @@ from jax.sharding import Mesh
 from .database import Database
 from .jointree import JoinQuery, JoinTreeNode
 from .relations import Relation, dense_keys
-from .shred import Shred, build_plan, build_shred
+from .shred import Shred, build_plan, build_shred, pack_arena
 from repro.compat import axis_size
 
 __all__ = [
@@ -195,13 +195,25 @@ def _build_one_shard(sdb: Database, query: JoinQuery, rep: str,
         w = jnp.where(jnp.arange(n) < valid, sh.root.weight, 0)
         root = dataclasses.replace(sh.root, weight=w)
         prefE = jnp.concatenate([jnp.zeros((1,), I64), jnp.cumsum(w)])
-        sh = Shred(root=root, root_prefE=prefE, rep=sh.rep)
+        # Re-pack the fused-GET arena: it embeds root_prefE (DESIGN.md §4).
+        sh = Shred(root=root, root_prefE=prefE, rep=sh.rep,
+                   packed=pack_arena(root, prefE))
     return sh
 
 
 def _stack_shards(built, part: RootPartition, query: JoinQuery,
                   num_shards: int) -> StackedShred:
-    """Stack per-shard shreds (identical pytree shapes) into one pytree."""
+    """Stack per-shard shreds (identical pytree shapes) into one pytree.
+
+    The fused-GET arena (``Shred.packed``) stacks like any other leaf, but
+    only when *every* shard packed one with the same layout — int32
+    narrowing is per-shard, and a mixed verdict would be a treedef
+    mismatch. Otherwise the stack drops the arenas and the sharded
+    executors take the per-node path (the documented fallback ladder,
+    DESIGN.md §4/§9)."""
+    layouts = {None if b.packed is None else b.packed.layout for b in built}
+    if layouts != {None} and (None in layouts or len(layouts) > 1):
+        built = [dataclasses.replace(b, packed=None) for b in built]
     shred = jax.tree.map(lambda *xs: jnp.stack(xs), *built)
     w = jnp.stack([b.root.weight for b in built])
     pvar = query.prob_var
@@ -299,7 +311,16 @@ def reshard_incremental(
                           for v, col in old_root_data.columns.items()}))
         )
         if can_reuse:  # slice the full per-shard tree only for actual reuse
-            built.append(jax.tree.map(lambda x, s=s: x[s], stacked.shred))
+            sh = jax.tree.map(lambda x, s=s: x[s], stacked.shred)
+            if sh.packed is None:
+                # The stack may have dropped the arenas (a mixed per-shard
+                # narrowing verdict in an earlier epoch); re-pack so a reused
+                # shard carries exactly what a from-scratch build would —
+                # otherwise packed=None would propagate through every future
+                # reuse and the fused path would be lost until a rebind.
+                sh = dataclasses.replace(
+                    sh, packed=pack_arena(sh.root, sh.root_prefE))
+            built.append(sh)
             reused += 1
         else:
             built.append(_build_one_shard(sdb, query, rep, part_new.valid[s]))

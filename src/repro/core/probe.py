@@ -13,6 +13,14 @@ weight-prefix array are confined to the correct join-key run automatically,
 because a run's weight interval [cumw_excl[start], cumw_excl[start+len]) is
 contiguous in the global prefix (see shred.py).
 
+Fused USR-GET (rep='usr_fused', DESIGN.md §4 "Fused GET"): the whole
+per-node walk collapsed into ONE Pallas kernel launch over the shred's
+packed int32 index arena (shred.pack_arena) — root locate + mixed-radix
+split + per-child binary search + perm resolution in a single pass, the
+arena VMEM-resident across tree levels. Bit-identical to usr_get_rows;
+falls back to the per-node path down a static ladder (no arena / arena
+over the VMEM budget / Pallas disabled).
+
 CSR-GET: faithful linked-list walk (bounded while_loop), vmapped over probes
 — O(log|db| + d) per probe with d the max join degree. Kept as the
 paper-faithful baseline; pointer chasing does not vectorize on TPU.
@@ -25,19 +33,41 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import ops
+from repro.kernels.tree_probe import tree_probe
+
 from .shred import Shred, ShredNode
 
 __all__ = ["get", "get_rows", "csr_get_rows", "usr_get_rows",
-           "csr_get_rows_cached"]
+           "usr_get_rows_fused", "csr_get_rows_cached", "fused_available",
+           "select_rep"]
 
 I64 = jnp.int64
 
+# Fused-GET VMEM budget: arenas above this int32-element count fall back to
+# the per-node path (the bsearch table limit, shared — DESIGN.md §9).
+FUSED_VMEM_LIMIT = ops.VMEM_PREF_LIMIT
+
 
 def _root_locate(shred: Shred, pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Binary search the root prefix vector: pos -> (root row j, local offset i)."""
+    """Binary search the root prefix vector: pos -> (root row j, local offset i).
+
+    When the shred carries a packed arena (static: every prefix value fits
+    int32), the search runs through ``ops.searchsorted_prefix`` — the
+    Pallas branchless-descent kernel — on int32-narrowed views; the int64
+    local offset is still derived from the original prefix, so results are
+    bit-identical to the XLA path (DESIGN.md §4).
+    """
     prefE = shred.root_prefE
     n = shred.root.num_rows
-    j = jnp.clip(jnp.searchsorted(prefE, pos, side="right") - 1, 0, max(n - 1, 0))
+    if shred.packed is not None and n and ops.pallas_preferred():
+        j = jnp.minimum(
+            ops.searchsorted_prefix(prefE.astype(jnp.int32),
+                                    pos.astype(jnp.int32)),
+            n - 1)
+    else:
+        j = jnp.clip(jnp.searchsorted(prefE, pos, side="right") - 1, 0,
+                     max(n - 1, 0))
     local = pos - prefE[j]
     return j.astype(jnp.int32), local.astype(I64)
 
@@ -86,6 +116,60 @@ def usr_get_rows(shred: Shred, pos: jnp.ndarray) -> Dict[str, jnp.ndarray]:
     out: Dict[str, jnp.ndarray] = {}
     _usr_sub(shred.root, rows, local, out)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Fused USR (single Pallas pass over the packed arena, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+def fused_available(shred: Shred) -> bool:
+    """Static verdict: does this shred take the fused kernel path?
+    (arena packed + within the VMEM budget + Pallas not disabled)."""
+    return (shred.packed is not None
+            and shred.packed.layout.size <= FUSED_VMEM_LIMIT
+            and ops.pallas_enabled())
+
+
+def select_rep(shred: Shred, base: str) -> Tuple[str, bool]:
+    """The executor policy both plan layers share (DESIGN.md §4): given the
+    rep a plan would use (``usr``/``csr``), return ``(rep, narrow)`` —
+    upgrade USR to the fused kernel and enable int32-narrowed sampler
+    searches iff the shred packed an arena AND the backend prefers Pallas
+    (compiled mode / ``REPRO_PALLAS_PREFER=1``). Single source of truth so
+    single-device and sharded plans cannot diverge."""
+    prefer = ops.pallas_preferred()
+    narrow = shred.packed is not None and prefer
+    if base == "usr" and prefer and fused_available(shred):
+        return "usr_fused", narrow
+    return base, narrow
+
+
+def usr_get_rows_fused(shred: Shred, pos: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """Resolve probe positions to per-node row indices in ONE kernel launch.
+
+    Bit-identical to ``usr_get_rows`` (same rows, every node). The fallback
+    ladder is static — decided at trace time from the shred's pytree
+    structure, never from traced values:
+
+      1. no packed arena (int32 narrowing refused: join > 2^31, or an
+         empty node)                      -> per-node USR (or CSR) path;
+      2. arena over the VMEM budget       -> per-node path;
+      3. ``REPRO_PALLAS_DISABLE=1``       -> per-node path.
+
+    Positions are narrowed to int32 — exact, because a packed arena
+    guarantees join_size < 2^31 and callers clamp pads to n - 1 (GET's
+    out-of-range lanes are arbitrary-but-masked either way, §4).
+    """
+    if not fused_available(shred):
+        rep = "usr" if shred.rep in ("usr", "both") else "csr"
+        return get_rows(shred, pos, rep=rep)
+    packed = shred.packed
+    k = pos.shape[0]
+    tiles = ops.to_tiles(pos.astype(jnp.int32))
+    out = tree_probe(packed.arena, tiles, layout=packed.layout,
+                     interpret=ops.interpret_default())
+    flat = out.reshape(out.shape[0], -1)[:, :k]
+    return {name: flat[i] for i, name in enumerate(packed.layout.names)}
 
 
 # ---------------------------------------------------------------------------
@@ -206,6 +290,8 @@ def csr_get_rows_cached(shred: Shred, pos: jnp.ndarray) -> Dict[str, jnp.ndarray
 
 def get_rows(shred: Shred, pos: jnp.ndarray, rep: str = None) -> Dict[str, jnp.ndarray]:
     rep = rep or ("usr" if shred.rep in ("usr", "both") else "csr")
+    if rep == "usr_fused":
+        return usr_get_rows_fused(shred, pos)
     if rep == "usr":
         return usr_get_rows(shred, pos)
     return csr_get_rows(shred, pos)

@@ -11,7 +11,9 @@ enables jax x64 on import (see core/__init__.py).
 Vmap-safety contract (DESIGN.md §10): ``exprace_positions`` and
 ``pt_bern_flat_positions`` draw randomness *only* from their PRNG key and
 are built entirely from per-lane-deterministic primitives (elementwise
-math, sort, cumsum, searchsorted, scatter-with-drop) — no host callbacks,
+math, sort, cumsum, searchsorted — including the Pallas branchless-descent
+searchsorted kernel, which is a fixed unrolled gather sequence and vmaps
+by adding a grid dimension — scatter-with-drop) — no host callbacks,
 no data-dependent shapes, no cross-lane reductions. ``jax.vmap`` over the
 key argument (weights/probabilities/prefixes broadcast) therefore yields,
 lane for lane, the *bit-identical* sample a standalone call under that key
@@ -49,6 +51,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.kernels import ops
 
 __all__ = [
     "PositionSample",
@@ -164,8 +168,21 @@ def hybrid_positions(key, p, n: int, cap: int) -> PositionSample:
 # Non-uniform (Poisson) position sampling over root groups
 # ---------------------------------------------------------------------------
 
+def _locate_prefix(prefE, q, hi, narrow: bool):
+    """clip(searchsorted(prefE, q, 'right') - 1, 0, hi) — routed through the
+    Pallas branchless-descent kernel (``ops.searchsorted_prefix``) on
+    int32-narrowed views when the caller statically guarantees every value
+    fits int32 (``narrow=True``: the compiled plan knows join_size < 2^31
+    because the shred packed its fused arena — DESIGN.md §4). Bit-identical
+    to the XLA expression either way; float prefixes (EXPRACE's mass
+    vector) take ``ops``' XLA fallback — dtypes there never permit."""
+    if narrow:
+        prefE, q = prefE.astype(jnp.int32), q.astype(jnp.int32)
+    return jnp.minimum(ops.searchsorted_prefix(prefE, q), hi).astype(I64)
+
+
 def exprace_positions(
-    key, w, p, prefE, cap: int, arrival_cap: int = 0
+    key, w, p, prefE, cap: int, arrival_cap: int = 0, narrow: bool = False
 ) -> PositionSample:
     """EXPRACE: exact non-uniform Poisson sample positions via a thinned
     Poisson process (module docstring). Fully vectorized, exact for all
@@ -178,6 +195,9 @@ def exprace_positions(
     cap:        output position capacity
     arrival_cap: scratch capacity for raw Poisson arrivals (default: cap;
         needs >= ln2/min(p,1-p)-adjusted slack — see estimate.plan_capacity)
+    narrow: static caller guarantee that every integer prefix value fits
+        int32, enabling the Pallas searchsorted kernel (``_locate_prefix``);
+        must not change results (it does not — same clip semantics).
     """
     acap = arrival_cap or cap
     R = w.shape[0]
@@ -196,7 +216,9 @@ def exprace_positions(
     aM = jnp.minimum(M, acap)
     v = jax.random.uniform(kV, (acap,), F64) * Lam
     avalid = jnp.arange(acap, dtype=I64) < aM
-    r = jnp.clip(jnp.searchsorted(massE, v, side="right") - 1, 0, R - 1)
+    # Inverse-CDF arrival placement: float mass vector, so the ops wrapper
+    # always takes its XLA fallback here (dtypes never permit int32).
+    r = _locate_prefix(massE, v, R - 1, False)
     cell = jnp.floor((v - massE[r]) / jnp.maximum(lam[r], _TINY)).astype(I64)
     cell = jnp.clip(cell, 0, jnp.maximum(w[r] - 1, 0))
     gid = jnp.where(avalid, prefE[r] + cell, n)  # global cell id; pads -> n
@@ -206,7 +228,7 @@ def exprace_positions(
     uniq = jnp.logical_and(
         gid < n, jnp.concatenate([jnp.ones((1,), jnp.bool_), gid[1:] != gid[:-1]])
     )
-    seg = jnp.clip(jnp.searchsorted(prefE, gid, side="right") - 1, 0, R - 1)
+    seg = _locate_prefix(prefE, gid, R - 1, narrow)
     hits = jnp.zeros((R,), I64).at[seg].add(uniq.astype(I64))  # per-root count
     k_r = jnp.where(comp, w - hits, hits)  # success count per root (exact)
     outE = jnp.concatenate([jnp.zeros((1,), I64), jnp.cumsum(k_r)])
@@ -229,7 +251,7 @@ def exprace_positions(
     # --- emit output slots --------------------------------------------------
     t = jnp.arange(cap, dtype=I64)
     tvalid = t < jnp.minimum(K, cap)
-    rO = jnp.clip(jnp.searchsorted(outE, t, side="right") - 1, 0, R - 1)
+    rO = _locate_prefix(outE, t, R - 1, narrow)
     l = t - outE[rO]
     # direct: l-th unique arrival of segment rO
     direct_pos = Fc[jnp.clip(hitsE[rO] + l, 0, acap - 1)]

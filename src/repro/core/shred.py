@@ -34,15 +34,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import ops as _kops
+
 from .database import Database
 from .jointree import Atom, JoinQuery, JoinTreeNode, gyo_join_tree, reroot_for
 from .relations import Relation, dense_keys
 
 __all__ = ["ShredNode", "Shred", "build_shred", "build_plan",
-           "reshred_incremental"]
+           "reshred_incremental", "PackedShred", "ArenaLayout", "ArenaEdge",
+           "pack_arena"]
 
 I64 = jnp.int64
 I32 = jnp.int32
+_I32_MAX = (1 << 31) - 1
 
 
 @jax.tree_util.register_pytree_node_class
@@ -107,6 +111,116 @@ class ShredNode:
         return out
 
 
+# ---------------------------------------------------------------------------
+# Packed index arena (fused GET, DESIGN.md §4)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArenaEdge:
+    """Static arena addressing of one tree edge (all offsets are element
+    indices into the flat int32 arena; baked into the fused kernel)."""
+
+    parent: int    # output slot of the parent node
+    slot: int      # output slot of the child node (pre-order)
+    cs_off: int    # parent's child_start column for this edge (n_parent,)
+    cw_off: int    # parent's child_w column for this edge (n_parent,)
+    ce_off: int    # child's cumw_excl (n_child + 1,)
+    perm_off: int  # child's perm (n_child,)
+    n_child: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ArenaLayout:
+    """Hashable static layout of a packed arena: slot names (pre-order,
+    slot 0 = root), root prefix length, and per-edge offsets. Passed as a
+    static jit argument to ``kernels.tree_probe.tree_probe``."""
+
+    names: Tuple[str, ...]
+    n_root: int
+    root_len: int  # n_root + 1 (root_prefE lives at offset 0)
+    edges: Tuple[ArenaEdge, ...]
+    size: int      # total arena length in int32 elements
+
+    @property
+    def num_slots(self) -> int:
+        return len(self.names)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PackedShred:
+    """The fused-GET index arena: every per-node table (``root_prefE``,
+    ``child_start``, ``child_w``, ``cumw_excl``, ``perm``) narrowed to
+    int32 and packed into ONE flat buffer + a static offset layout, so the
+    fused tree-probe kernel keeps the whole index VMEM-resident across
+    tree levels (DESIGN.md §4 "Fused GET"). Built iff every value fits
+    int32 (join_size < 2^31 — the narrowing rule; otherwise the int64
+    per-node path stands, DESIGN.md §9)."""
+
+    arena: jnp.ndarray  # (size,) int32
+    layout: ArenaLayout
+
+    def tree_flatten(self):
+        return (self.arena,), (self.layout,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0], aux[0])
+
+
+def pack_arena(root: "ShredNode",
+               root_prefE: jnp.ndarray) -> Optional["PackedShred"]:
+    """Pack a shred's probe tables into a ``PackedShred`` arena, or return
+    ``None`` when the fused path cannot apply: an empty node (nothing to
+    probe — callers guard ``join_size == 0`` anyway), any value above
+    int32 range (the documented int64 fallback, DESIGN.md §9), or a total
+    size over the VMEM table budget — an over-budget arena would be
+    rejected by every consumer (``probe.fused_available`` and the
+    narrowed Pallas searchsorted alike), so materializing the int32 copy
+    would only waste device memory on every cached index.
+
+    Layout: ``root_prefE`` at offset 0, then per tree edge in the exact
+    pre-order the per-node GET recurses (``probe._usr_sub``):
+    ``child_start``, ``child_w``, ``cumw_excl``, ``perm``.
+    """
+    if any(nd.num_rows == 0 for nd in root.nodes()):
+        return None
+    pieces = [np.asarray(root_prefE)]
+    names = [root.name]
+    edges: List[ArenaEdge] = []
+    off = pieces[0].shape[0]
+
+    def walk(node: "ShredNode", parent_slot: int) -> None:
+        nonlocal off
+        for ci, child in enumerate(node.children):
+            slot = len(names)
+            names.append(child.name)
+            cols = (np.asarray(node.child_start[ci]),
+                    np.asarray(node.child_w[ci]),
+                    np.asarray(child.cumw_excl),
+                    np.asarray(child.perm))
+            offs = []
+            for c in cols:
+                offs.append(off)
+                off += c.shape[0]
+            pieces.extend(cols)
+            edges.append(ArenaEdge(parent_slot, slot, offs[0], offs[1],
+                                   offs[2], offs[3], child.num_rows))
+            walk(child, slot)
+
+    walk(root, 0)
+    if off > _kops.VMEM_PREF_LIMIT:
+        return None  # over the VMEM table budget: no consumer could use it
+    for p in pieces:
+        if p.size and int(p.max()) > _I32_MAX:
+            return None  # narrowing rule: values must fit int32
+    arena = jnp.asarray(
+        np.concatenate([p.astype(np.int32) for p in pieces]))
+    layout = ArenaLayout(tuple(names), root.num_rows,
+                         pieces[0].shape[0], tuple(edges), int(arena.shape[0]))
+    return PackedShred(arena, layout)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class Shred:
@@ -114,18 +228,22 @@ class Shred:
 
     root_prefE: (n_root + 1,) int64 exclusive prefix of root weights;
     root_prefE[-1] == |mu*(N)| == |Q(db)|.
+    packed: the optional fused-GET int32 arena (``pack_arena``); ``None``
+    when narrowing does not apply — its presence is *static* (part of the
+    pytree structure), so jitted executors dispatch on it at trace time.
     """
 
     root: ShredNode
     root_prefE: jnp.ndarray
     rep: str  # 'csr' | 'usr' | 'both' (static)
+    packed: Optional[PackedShred] = None
 
     def tree_flatten(self):
-        return (self.root, self.root_prefE), (self.rep,)
+        return (self.root, self.root_prefE, self.packed), (self.rep,)
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        return cls(leaves[0], leaves[1], aux[0])
+        return cls(leaves[0], leaves[1], aux[0], leaves[2])
 
     @property
     def join_size(self) -> jnp.ndarray:
@@ -277,7 +395,8 @@ def build_shred(db: Database, query: JoinQuery, rep: str = "usr") -> Shred:
     plan = build_plan(query)
     root = _build_node(plan, db, rep, frozenset())
     prefE = jnp.concatenate([jnp.zeros((1,), I64), jnp.cumsum(root.weight)])
-    return Shred(root=root, root_prefE=prefE, rep=rep)
+    return Shred(root=root, root_prefE=prefE, rep=rep,
+                 packed=pack_arena(root, prefE))
 
 
 # ---------------------------------------------------------------------------
@@ -640,4 +759,8 @@ def reshred_incremental(base: Shred, db: Database, query: JoinQuery,
             [jnp.zeros((1,), I64), jnp.cumsum(root.weight)])
     else:
         prefE = base.root_prefE
-    return Shred(root=root, root_prefE=prefE, rep=base.rep)
+    # The fused-GET arena is re-packed from the merged arrays (a flat
+    # concat — bulk copy, not sort work), keeping it coherent with the
+    # incremental index: bit-identical to a from-scratch build's arena.
+    return Shred(root=root, root_prefE=prefE, rep=base.rep,
+                 packed=pack_arena(root, prefE))

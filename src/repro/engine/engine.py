@@ -181,9 +181,7 @@ class QueryEngine:
             return hit
         self.stats.plan_misses += 1
         plan = CompiledPlan(
-            query=query, rep=rep,
-            rep_default="usr" if rep == "both" else rep,
-            method=method, project=project,
+            query=query, rep=rep, method=method, project=project,
             shred=self._shred_for(query, rep), policy=self.policy,
         )
         self._plans[key] = plan

@@ -4,7 +4,7 @@ One executor = one trace unit. The Poisson-sample executor is the former
 ``core/poisson.py`` ``_sample_jit`` moved here unchanged, so samples drawn
 through the engine are bit-identical to the pre-engine ``PoissonSampler``
 under the same PRNG key. ``jax.jit`` caches traces per static
-``(cap, rep, n, acap)`` tuple; the engine's plan cache keeps the jitted
+``(cap, rep, n, acap, narrow)`` tuple; the engine's plan cache keeps the jitted
 callable (and thus its trace cache) alive across queries with the same
 fingerprint, which is what makes warm calls retrace-free.
 
@@ -38,10 +38,11 @@ __all__ = [
 
 def _sample_jit(
     shred: Shred, w, p, prefE, key, cap: int, rep: str, method: str, n: int = 0,
-    acap: int = 0, project=None,
+    acap: int = 0, project=None, narrow: bool = False,
 ) -> JoinSample:
     if method == "exprace":
-        ps = sampling.exprace_positions(key, w, p, prefE, cap, arrival_cap=acap)
+        ps = sampling.exprace_positions(key, w, p, prefE, cap,
+                                        arrival_cap=acap, narrow=narrow)
     elif method == "ptbern_flat":  # n is the static, concrete join size
         ps = sampling.pt_bern_flat_positions(key, p, prefE, n, cap)
     else:
@@ -61,16 +62,17 @@ def sample_executor(method: str, project: Optional[tuple]):
     """
     return jax.jit(
         partial(_sample_jit, method=method, project=project),
-        static_argnames=("cap", "rep", "n", "acap"),
+        static_argnames=("cap", "rep", "n", "acap", "narrow"),
     )
 
 
 def _batched_sample_jit(
     shred: Shred, w, p, prefE, keys, cap: int, rep: str, method: str,
-    n: int = 0, acap: int = 0, project=None,
+    n: int = 0, acap: int = 0, project=None, narrow: bool = False,
 ) -> JoinSample:
     one = partial(_sample_jit, shred, w, p, prefE, cap=cap, rep=rep,
-                  method=method, n=n, acap=acap, project=project)
+                  method=method, n=n, acap=acap, project=project,
+                  narrow=narrow)
     return jax.vmap(one)(keys)
 
 
@@ -83,7 +85,7 @@ def batched_sample_executor(method: str, project: Optional[tuple]):
     """
     return jax.jit(
         partial(_batched_sample_jit, method=method, project=project),
-        static_argnames=("cap", "rep", "n", "acap"),
+        static_argnames=("cap", "rep", "n", "acap", "narrow"),
     )
 
 

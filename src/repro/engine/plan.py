@@ -53,11 +53,13 @@ class CompiledPlan:
 
     query: JoinQuery
     rep: str                      # representation the shred was built with
-    rep_default: str              # concrete rep used when a call passes None
     method: str
     project: Optional[Tuple[str, ...]]
     shred: Shred
     policy: CapacityPolicy = DEFAULT_POLICY
+    # ``rep_default`` (the concrete rep used when a call passes None) and
+    # ``_narrow`` are derived per bound shred in ``_bind_shred`` — see
+    # probe.select_rep (DESIGN.md §4).
 
     def __post_init__(self):
         self._default_cap = None
@@ -72,6 +74,12 @@ class CompiledPlan:
         self.shred = shred
         self.w = root.weight
         self.prefE = shred.root_prefE
+        # Executor rep + int32-narrowing selection (probe.select_rep,
+        # DESIGN.md §4). Recomputed on every (re)bind: an upgraded index
+        # may gain or lose its arena (int32 narrowing is per-snapshot).
+        # Explicit per-call rep overrides still win in sample()/full_join().
+        self.rep_default, self._narrow = probe.select_rep(
+            shred, "usr" if self.rep == "both" else self.rep)
         if self.query.prob_var is not None:
             if self.query.prob_var not in root.variables:
                 raise AssertionError("build_plan must reroot prob_var to the root")
@@ -124,7 +132,8 @@ class CompiledPlan:
         acap = acap or (self.arrival_capacity() if self.method == "exprace" else 0)
         n = self.join_size if self.method == "ptbern_flat" else 0
         return self._jit(self.shred, self.w, self.p, self.prefE, key, cap=cap,
-                         rep=rep or self.rep_default, n=n, acap=acap)
+                         rep=rep or self.rep_default, n=n, acap=acap,
+                         narrow=self._narrow)
 
     def sample_batch(self, keys, cap: Optional[int] = None,
                      rep: Optional[str] = None,
@@ -150,7 +159,7 @@ class CompiledPlan:
         kpad, _ = executors.pad_batch_keys(keys)
         smp = self._batched_jit(self.shred, self.w, self.p, self.prefE, kpad,
                                 cap=cap, rep=rep or self.rep_default, n=n,
-                                acap=acap)
+                                acap=acap, narrow=self._narrow)
         if int(kpad.shape[0]) != batch:
             smp = jax.tree.map(lambda x: x[:batch], smp)
         return smp

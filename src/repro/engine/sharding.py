@@ -115,7 +115,7 @@ class ShardedPlan:
             raise ValueError(
                 f"sharded sampling supports method='exprace', got {method!r}")
         self.query = query
-        self.rep = "usr" if rep == "both" else rep
+        self._base_rep = "usr" if rep == "both" else rep
         self.method = method
         self.project = tuple(project) if project else None
         self.mesh = mesh
@@ -128,6 +128,20 @@ class ShardedPlan:
 
     def _bind_stacked(self, stacked: StackedShred) -> None:
         self.stacked = stacked
+        # Executor rep + int32-narrowing selection (probe.select_rep — the
+        # same policy as the single-device plan, over the stacked arena
+        # with its leading shard dim; DESIGN.md §4). Both verdicts are
+        # baked into the shard_map partials, so a rebind that flips either
+        # invalidates the executor caches (a retrace, not a rebuild — same
+        # economics as a capacity change).
+        rep, narrow = probe.select_rep(stacked.shred, self._base_rep)
+        if (getattr(self, "rep", None), getattr(self, "_narrow", None)) \
+                != (rep, narrow):
+            self._samplers.clear()
+            self._batched_samplers.clear()
+            self._flattener = None
+        self.rep = rep
+        self._narrow = narrow
         self.num_shards = stacked.num_shards
         self.join_sizes = stacked.join_sizes
         # Global flat offset of each shard's position space: shard flattens
@@ -181,19 +195,20 @@ class ShardedPlan:
     # -- shard_map executors -------------------------------------------------
     @staticmethod
     def _local_sample(shred, w, p, prefE, key, *, cap, acap, rep, method,
-                      project, axes):
+                      project, axes, narrow=False):
         key = fold_shard_key(key, axes)
         # Drop the leading (stacked) singleton shard dim.
         shred, w, p, prefE = jax.tree.map(lambda x: x[0], (shred, w, p, prefE))
         s = executors._sample_jit(shred, w, p, prefE, key, cap=cap, rep=rep,
-                                  method=method, acap=acap, project=project)
+                                  method=method, acap=acap, project=project,
+                                  narrow=narrow)
         total = jax.lax.psum(s.count, axes)
         # Re-add the shard dim so out_specs can concatenate across shards.
         return jax.tree.map(lambda x: x[None], s), total
 
     @staticmethod
     def _local_sample_batch(shred, w, p, prefE, keys, *, cap, acap, rep,
-                            method, project, axes):
+                            method, project, axes, narrow=False):
         """The batched shard body (DESIGN.md §10): shard_map outside, vmap
         inside. Each lane folds the same shard coordinate into its own base
         key, so lane ``b`` reproduces the single-draw sharded path under
@@ -203,7 +218,8 @@ class ShardedPlan:
         def one(k):
             return executors._sample_jit(
                 shred, w, p, prefE, fold_shard_key(k, axes), cap=cap,
-                rep=rep, method=method, acap=acap, project=project)
+                rep=rep, method=method, acap=acap, project=project,
+                narrow=narrow)
 
         s = jax.vmap(one)(keys)              # leaves: (B, ...)
         totals = jax.lax.psum(s.count, axes)  # (B,) global counts
@@ -224,7 +240,7 @@ class ShardedPlan:
             fn = jax.jit(shard_map(
                 partial(self._local_sample, cap=cap, acap=acap, rep=self.rep,
                         method=self.method, project=self.project,
-                        axes=self.axes),
+                        axes=self.axes, narrow=self._narrow),
                 mesh=self.mesh,
                 in_specs=(spec, spec, spec, spec, P()),
                 out_specs=(spec, P()),
@@ -240,7 +256,8 @@ class ShardedPlan:
             fn = jax.jit(shard_map(
                 partial(self._local_sample_batch, cap=cap, acap=acap,
                         rep=self.rep, method=self.method,
-                        project=self.project, axes=self.axes),
+                        project=self.project, axes=self.axes,
+                        narrow=self._narrow),
                 mesh=self.mesh,
                 in_specs=(spec, spec, spec, spec, P()),
                 out_specs=(spec, P()),

@@ -1,6 +1,7 @@
 """Pallas TPU kernels for the framework's compute hot-spots.
 
     bsearch_probe  bulk binary search into prefix vectors (USR-GET inner loop)
+    tree_probe     fused single-pass USR-GET over the packed index arena
     prefix_sum     carry-chained weights -> pref vector (index build)
     geo_gaps       fused GEO position generation (uniform sampling)
     flash_decode   online-softmax decode attention (serving, long KV)

@@ -5,12 +5,21 @@ and the documented fallbacks:
   * int64 offsets (joins > 2^31) fall back to XLA searchsorted/cumsum —
     TPU has no native 64-bit gathers (DESIGN.md §9);
   * prefix tables too large for VMEM fall back likewise.
-``interpret=True`` everywhere in this container (CPU); on real TPUs the flag
-flips to False via the REPRO_PALLAS_INTERPRET env var.
+
+Interpret mode is resolved *at call time*: every wrapper takes an
+``interpret=`` override (tests flip it per-case), defaulting to the
+``REPRO_PALLAS_INTERPRET`` env var (interpret mode in this CPU container;
+on real TPUs the var flips kernels to compiled mode). Setting
+``REPRO_PALLAS_DISABLE=1`` routes every wrapper through its pure-XLA/jnp
+fallback (the searchsorted/cumsum fallbacks for the index kernels, the
+``ref`` oracles for GEO and attention) — the operator escape hatch for a
+kernel bug, exercised per-case by the tests (``TestOpsDispatch``).
 """
 from __future__ import annotations
 
+import math  # noqa: F401  (re-exported convenience; hoisted per style rule)
 import os
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,70 +31,123 @@ from .prefix_sum import prefix_sum_tiles as _prefix_tiles
 from .flash_decode import flash_decode as _flash_decode
 from .flash_prefill import flash_prefill as _flash_prefill
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
-_VMEM_PREF_LIMIT = 1 << 21  # int32 prefix entries kept fully VMEM-resident
+# int32 table entries kept fully VMEM-resident (bsearch prefix tables and
+# the fused-GET arena share this budget — core/probe.py imports it).
+VMEM_PREF_LIMIT = 1 << 21
+_VMEM_PREF_LIMIT = VMEM_PREF_LIMIT  # back-compat alias
 
 
-def _to_tiles(x: jnp.ndarray, fill) -> jnp.ndarray:
+def interpret_default() -> bool:
+    """Interpret-mode default, read from the environment at call time (so
+    tests and CI legs can flip it without re-importing the module)."""
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def pallas_enabled() -> bool:
+    """False when ``REPRO_PALLAS_DISABLE=1``: every wrapper (and the fused
+    GET dispatch in core/probe.py) uses its pure-XLA fallback instead."""
+    return os.environ.get("REPRO_PALLAS_DISABLE", "0") in ("", "0")
+
+
+def pallas_preferred() -> bool:
+    """Should jitted hot paths *prefer* Pallas kernels over their XLA
+    twins when both are available? True in compiled mode (real TPU — the
+    kernels are the point); in interpret mode (this CPU container) the
+    interpreter's per-access overhead loses to XLA inside an already-jitted
+    executor, so hot paths default to XLA unless ``REPRO_PALLAS_PREFER=1``
+    pins the kernel path (the CI matrix leg does, so the interpret-mode
+    kernels are exercised by the whole tier-1 suite, not only by the
+    explicit-rep tests). Capability gates (``pallas_enabled``, dtype/VMEM
+    fallbacks) still apply on top; explicit ``rep='usr_fused'`` requests
+    bypass this preference. Resolved at trace time."""
+    if not pallas_enabled():
+        return False
+    if os.environ.get("REPRO_PALLAS_PREFER", "0") not in ("", "0"):
+        return True
+    return not interpret_default()  # compiled mode: kernels win
+
+
+def _interpret(override: Optional[bool]) -> bool:
+    return interpret_default() if override is None else override
+
+
+def to_tiles(x: jnp.ndarray, fill=0) -> jnp.ndarray:
+    """Pad a 1-D vector to a whole number of 128-lanes rows and retile."""
     n = x.shape[0]
     rows = -(-n // 128)
     pad = rows * 128 - n
     return jnp.pad(x, (0, pad), constant_values=fill).reshape(rows, 128)
 
 
-def searchsorted_prefix(pref: jnp.ndarray, q: jnp.ndarray) -> jnp.ndarray:
-    """Bulk 'locate offset in prefix vector': max j with pref[j] <= q.
+def searchsorted_prefix(pref: jnp.ndarray, q: jnp.ndarray,
+                        *, interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Bulk 'locate offset in prefix vector': max j with pref[j] <= q
+    (== ``searchsorted(pref, q, 'right') - 1`` clamped at 0).
 
-    Pallas fast path for int32-representable tables; XLA fallback otherwise.
+    Pallas fast path for int32 tables/queries that fit VMEM; identical XLA
+    fallback for every other dtype (int64 joins > 2^31, float mass
+    vectors) or oversized table — "where dtypes permit" (DESIGN.md §9).
     """
     n = q.shape[0]
-    if (pref.dtype == jnp.int64 or q.dtype == jnp.int64
-            or pref.shape[0] > _VMEM_PREF_LIMIT):
+    if (pref.dtype != jnp.int32 or q.dtype != jnp.int32
+            or pref.shape[0] > _VMEM_PREF_LIMIT or not pallas_enabled()):
         return jnp.maximum(jnp.searchsorted(pref, q, side="right") - 1, 0)
-    tiles = _to_tiles(q.astype(jnp.int32), 0)
-    out = _bsearch_tiles(pref.astype(jnp.int32), tiles, interpret=INTERPRET)
+    tiles = to_tiles(q)
+    out = _bsearch_tiles(pref, tiles, interpret=_interpret(interpret))
     return out.reshape(-1)[:n]
 
 
-def prefix_sum(x: jnp.ndarray, exclusive: bool = False) -> jnp.ndarray:
+def prefix_sum(x: jnp.ndarray, exclusive: bool = False,
+               *, interpret: Optional[bool] = None) -> jnp.ndarray:
     """Prefix sum of a 1-D vector (the index's pref column)."""
     n = x.shape[0]
-    if x.dtype == jnp.int64:
+    if x.dtype == jnp.int64 or not pallas_enabled():
         s = jnp.cumsum(x)
     else:
-        s = _prefix_tiles(_to_tiles(x, 0), interpret=INTERPRET).reshape(-1)[:n]
+        s = _prefix_tiles(to_tiles(x),
+                          interpret=_interpret(interpret)).reshape(-1)[:n]
     if exclusive:
         s = jnp.concatenate([jnp.zeros((1,), s.dtype), s[:-1]])
     return s
 
 
-def geo_positions_fused(u: jnp.ndarray, p) -> jnp.ndarray:
+def geo_positions_fused(u: jnp.ndarray, p,
+                        *, interpret: Optional[bool] = None) -> jnp.ndarray:
     """Fused uniform->geometric->positions transform (ascending int32)."""
     n = u.shape[0]
-    tiles = _to_tiles(u.astype(jnp.float32), 1.0 - 1e-7)
-    return _geo_tiles(tiles, p, interpret=INTERPRET).reshape(-1)[:n]
+    if not pallas_enabled():
+        return _ref.geo_gaps_ref(u.astype(jnp.float32), p)
+    tiles = to_tiles(u.astype(jnp.float32), 1.0 - 1e-7)
+    return _geo_tiles(tiles, p,
+                      interpret=_interpret(interpret)).reshape(-1)[:n]
 
 
-def decode_attention(q, k, v, bias=None, *, block_s: int = 512) -> jnp.ndarray:
+def decode_attention(q, k, v, bias=None, *, block_s: int = 512,
+                     interpret: Optional[bool] = None) -> jnp.ndarray:
     """Online-softmax decode attention; pads S up to a block multiple."""
     B, H, D = q.shape
     _, KV_H, S, _ = k.shape
     if bias is None:
         bias = jnp.zeros((B, S), jnp.float32)
+    if not pallas_enabled():
+        return _ref.flash_decode_ref(q, k, v, bias)
     pad = (-S) % block_s
     if pad:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
         bias = jnp.pad(bias, ((0, 0), (0, pad)), constant_values=-1e30)
-    return _flash_decode(q, k, v, bias, block_s=block_s, interpret=INTERPRET)
+    return _flash_decode(q, k, v, bias, block_s=block_s,
+                         interpret=_interpret(interpret))
 
 
 def prefill_attention(q, k, v, *, causal: bool = True,
-                      block_q: int = 256, block_k: int = 512) -> jnp.ndarray:
+                      block_q: int = 256, block_k: int = 512,
+                      interpret: Optional[bool] = None) -> jnp.ndarray:
     """Causal flash attention over full sequences (train/prefill); pads S up
     to the block lcm."""
     B, H, S, D = q.shape
-    import math
+    if not pallas_enabled():
+        return _ref.flash_prefill_ref(q, k, v, causal=causal)
     step = math.lcm(block_q, block_k)
     pad = (-S) % step
     if pad:
@@ -93,7 +155,7 @@ def prefill_attention(q, k, v, *, causal: bool = True,
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
     out = _flash_prefill(q, k, v, causal=causal, block_q=block_q,
-                         block_k=block_k, interpret=INTERPRET)
+                         block_k=block_k, interpret=_interpret(interpret))
     return out[:, :, :S]
 
 

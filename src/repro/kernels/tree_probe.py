@@ -1,0 +1,114 @@
+"""Pallas TPU kernel: fused single-pass USR-GET over a packed index arena.
+
+The per-node USR-GET (core/probe.py) issues one XLA ``searchsorted`` plus
+separate ``perm``/``child_start``/``child_w`` gathers *per tree node per
+probe batch* — ~``3·depth`` HBM-resident ops per GET. This kernel fuses the
+whole walk: for one probe tile it performs root-locate plus the full
+pre-order tree descent — mixed-radix split (paper eq. 6-7), branchless
+power-of-two binary search into each child's exclusive weight prefix, and
+``perm`` resolution — in a single ``pallas_call``, reading every per-node
+table from ONE flat int32 **index arena** that stays VMEM-resident across
+tree levels (DESIGN.md §4 "Fused GET").
+
+The arena is packed at shred-build time (``core.shred.pack_arena``):
+``root_prefE`` first, then per tree edge (pre-order) the parent-indexed
+``child_start``/``child_w`` columns and the child's ``cumw_excl``/``perm``.
+All offsets are static Python ints baked into the kernel via the hashable
+``layout`` aux, so the walk unrolls at trace time with zero control flow.
+
+int32-only by design: the arena exists iff every packed value fits int32
+(join_size < 2^31 — the common case; larger joins keep the int64 per-node
+path per DESIGN.md §9). Probe positions are narrowed to int32 by the
+caller, which is exact under the same bound.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_ROWS = 8  # (8, 128) int32 probe tile
+
+
+def _descend(arena, off: int, length: int, q):
+    """max j in [0, length-1] with arena[off + j] <= q, branchless descent.
+
+    Requires arena[off] == 0 <= q (prefix vectors start at 0), the same
+    invariant as ``bsearch_probe``; one VMEM gather per power-of-two step.
+    """
+    steps = max(1, math.ceil(math.log2(max(length, 2))))
+    p = jnp.zeros(q.shape, jnp.int32)
+    for k in range(steps - 1, -1, -1):
+        cand = p + (1 << k)
+        val = jnp.take(arena, off + jnp.minimum(cand, length - 1))
+        ok = jnp.logical_and(cand < length, val <= q)
+        p = jnp.where(ok, cand, p)
+    return p
+
+
+def _kernel(arena_ref, q_ref, out_ref, *, layout):
+    arena = arena_ref[...]
+    pos = q_ref[...]
+    # Root locate: pos -> (root row j, local offset) — paper Fig. 4 line 3.
+    j = _descend(arena, 0, layout.root_len, pos)
+    j = jnp.minimum(j, layout.n_root - 1)
+    local = pos - jnp.take(arena, j)
+    out_ref[0, :, :] = j
+    rows = {0: j}
+    locs = {0: local}
+    # Pre-order walk, unrolled: edges are emitted in the exact recursion
+    # order of probe._usr_sub, so each parent's local offset is peeled in
+    # child order (child 0 least significant — paper eq. 6-7).
+    for e in layout.edges:
+        prow = rows[e.parent]
+        w = jnp.take(arena, e.cw_off + prow)
+        w_safe = jnp.maximum(w, 1)
+        idx = locs[e.parent] % w_safe
+        locs[e.parent] = locs[e.parent] // w_safe
+        start = jnp.take(arena, e.cs_off + prow)
+        target = jnp.take(arena, e.ce_off + start) + idx
+        jj = _descend(arena, e.ce_off, e.n_child + 1, target)
+        jj = jnp.minimum(jj, e.n_child - 1)
+        clocal = target - jnp.take(arena, e.ce_off + jj)
+        crow = jnp.take(arena, e.perm_off + jj)
+        out_ref[e.slot, :, :] = crow
+        rows[e.slot] = crow
+        locs[e.slot] = clocal
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("layout", "block_rows", "interpret"))
+def tree_probe(
+    arena: jnp.ndarray,
+    q: jnp.ndarray,
+    *,
+    layout,
+    block_rows: int = DEFAULT_BLOCK_ROWS,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """arena: (layout.size,) int32 packed index; q: (R, 128) int32 probe
+    positions. Returns (layout.num_slots, R, 128) int32 — the row index of
+    every tree node (slot order = ``layout.names``) for each probe lane.
+
+    The arena is kept wholly VMEM-resident (BlockSpec pinned to block 0);
+    callers own the VMEM-budget fallback (core/probe.py, DESIGN.md §9).
+    """
+    assert q.ndim == 2 and q.shape[1] == 128, q.shape
+    rows = q.shape[0]
+    grid = (pl.cdiv(rows, block_rows),)
+    return pl.pallas_call(
+        functools.partial(_kernel, layout=layout),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((layout.size,), lambda i: (0,)),      # whole arena
+            pl.BlockSpec((block_rows, 128), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((layout.num_slots, block_rows, 128),
+                               lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((layout.num_slots,) + q.shape,
+                                       jnp.int32),
+        interpret=interpret,
+    )(arena, q)

@@ -50,6 +50,109 @@ class TestBsearchProbe:
         assert (np.asarray(q) < prefn[got + 1]).all()
 
 
+class TestOpsDispatch:
+    """Call-time behavior of the ops wrappers: env flags are read per call
+    (not frozen at import), explicit ``interpret=`` overrides win, and
+    ``REPRO_PALLAS_DISABLE`` forces the XLA fallback."""
+
+    def _pref_q(self):
+        pref = jnp.asarray(np.concatenate([[0], np.cumsum([2, 3, 1, 4])]),
+                           jnp.int32)
+        q = jnp.asarray([0, 1, 2, 5, 9], jnp.int32)
+        return pref, q
+
+    def test_interpret_env_read_at_call_time(self, monkeypatch):
+        pref, q = self._pref_q()
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "1")
+        assert ops.interpret_default()
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+        assert not ops.interpret_default()  # no re-import needed
+
+    def test_explicit_interpret_overrides_env(self, monkeypatch):
+        # env says compiled mode (which this CPU container cannot lower);
+        # the per-call override must still take the interpreter path.
+        pref, q = self._pref_q()
+        monkeypatch.setenv("REPRO_PALLAS_INTERPRET", "0")
+        got = ops.searchsorted_prefix(pref, q, interpret=True)
+        want = ref.bsearch_probe_ref(pref, q.reshape(1, -1)).reshape(-1)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_disable_env_forces_fallback(self, monkeypatch):
+        pref, q = self._pref_q()
+        monkeypatch.setenv("REPRO_PALLAS_DISABLE", "1")
+        assert not ops.pallas_enabled()
+        assert not ops.pallas_preferred()
+        got = ops.searchsorted_prefix(pref, q)  # pure-XLA path
+        want = ref.bsearch_probe_ref(pref, q.reshape(1, -1)).reshape(-1)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    def test_disable_env_covers_geo_and_attention(self, monkeypatch):
+        # The disable escape hatch must cover EVERY wrapper, not only the
+        # index kernels: GEO and attention fall back to their ref oracles.
+        u = jax.random.uniform(jax.random.key(0), (300,), jnp.float32,
+                               minval=1e-6, maxval=1.0 - 1e-6)
+        ks = jax.random.split(jax.random.key(1), 3)
+        q = jax.random.normal(ks[0], (1, 2, 32), jnp.float32)
+        k = jax.random.normal(ks[1], (1, 2, 256, 32), jnp.float32)
+        v = jax.random.normal(ks[2], (1, 2, 256, 32), jnp.float32)
+        qs = q[:, :, None, :].repeat(256, axis=2)
+        on = (np.asarray(ops.geo_positions_fused(u, 0.1)),
+              np.asarray(ops.decode_attention(q, k, v, block_s=128)),
+              np.asarray(ops.prefill_attention(qs, k, v, block_q=128,
+                                               block_k=128)))
+        monkeypatch.setenv("REPRO_PALLAS_DISABLE", "1")
+        off = (np.asarray(ops.geo_positions_fused(u, 0.1)),
+               np.asarray(ops.decode_attention(q, k, v, block_s=128)),
+               np.asarray(ops.prefill_attention(qs, k, v, block_q=128,
+                                                block_k=128)))
+        np.testing.assert_array_equal(on[0], off[0])
+        np.testing.assert_allclose(on[1], off[1], rtol=2e-5, atol=2e-5)
+        np.testing.assert_allclose(on[2], off[2], rtol=2e-4, atol=2e-4)
+
+    def test_float_prefix_takes_fallback(self):
+        # EXPRACE's inverse-CDF search over the float mass vector: dtypes
+        # never permit the int32 kernel; the fallback must be exact.
+        pref = jnp.asarray([0.0, 1.5, 2.25, 7.0], jnp.float64)
+        q = jnp.asarray([0.0, 1.4999, 1.5, 6.9999, 7.5], jnp.float64)
+        got = ops.searchsorted_prefix(pref, q)
+        np.testing.assert_array_equal(np.asarray(got), [0, 0, 1, 2, 3])
+
+
+class TestTreeProbe:
+    """Fused tree-probe kernel vs the per-node USR walk (bit-identity over
+    full join shapes lives in tests/test_probe_fused.py; this is the
+    kernel-level shape/tiling sweep)."""
+
+    def _shred(self, seed, nr, ns):
+        from repro.core import Atom, Database, JoinQuery, build_shred
+        rng = np.random.default_rng(seed)
+        db = Database.from_columns({
+            "R": {"x": rng.integers(0, 6, nr), "y": rng.integers(0, 6, nr)},
+            "S": {"y": rng.integers(0, 6, ns), "z": rng.integers(0, 6, ns)},
+        })
+        q = JoinQuery((Atom.of("R", "x", "y"), Atom.of("S", "y", "z")))
+        return build_shred(db, q, rep="usr")
+
+    @pytest.mark.parametrize("k", [1, 127, 128, 129, 1000])
+    @pytest.mark.parametrize("block_rows", [1, 8])
+    def test_matches_per_node_across_tilings(self, k, block_rows):
+        from repro.core.probe import usr_get_rows
+        from repro.kernels.tree_probe import tree_probe
+        shred = self._shred(k, 40, 30)
+        assert shred.packed is not None
+        n = int(shred.join_size)
+        pos = jnp.asarray(np.random.default_rng(k).integers(0, n, k))
+        want = usr_get_rows(shred, pos)
+        tiles = ops.to_tiles(pos.astype(jnp.int32))
+        out = tree_probe(shred.packed.arena, tiles,
+                         layout=shred.packed.layout, block_rows=block_rows,
+                         interpret=True)
+        flat = np.asarray(out.reshape(out.shape[0], -1)[:, :k])
+        for i, name in enumerate(shred.packed.layout.names):
+            np.testing.assert_array_equal(flat[i], np.asarray(want[name]),
+                                          err_msg=name)
+
+
 class TestPrefixSum:
     @pytest.mark.parametrize("n", [1, 127, 128, 129, 8192, 10000])
     @pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
