@@ -1,0 +1,140 @@
+"""Replicated-fleet serving latency (DESIGN.md §12).
+
+End-to-end request latency through the fleet — admission at the router,
+fingerprint-affine dispatch, micro-batched execution on a replica, and
+the response hop back — measured with the real clock so the p50/p99 rows
+are wall-clock SLOs, not sim-time fictions. The stream mixes three query
+shapes (so affinity spreads work across replicas) with periodic deltas
+(so version barriers are on the serving path, not just in tests).
+
+Rows:
+  serve/R1/p50|p99      — single-replica fleet: the router+transport
+                          overhead on top of the bare micro-batcher;
+  serve/R4/p50|p99      — the 4-replica fleet on the same stream;
+  serve/R4/rejected-rate, serve/R4/retries — informational (us <= 0).
+
+The p99 rows are listed in ``BENCH_serve.json``'s ``gate_rows``: CI's
+bench-smoke gates each of them individually (tools/check_bench.py), so a
+tail-latency regression cannot hide behind a healthy suite median.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import Atom, Database, JoinQuery
+from repro.core.delta import DeltaBatch
+from repro.launch.fleet import Fleet, JoinSampleRequest, UpdateRequest
+from repro.launch.metrics import percentile
+from .timing import row, tiny
+
+
+def _workload(seed=0, nr=400, ns=700, nt=300):
+    rng = np.random.default_rng(seed)
+    db = Database.from_columns({
+        "R": {"x": rng.integers(0, 40, nr), "p": rng.random(nr) * 0.4},
+        "S": {"x": rng.integers(0, 40, ns), "y": rng.integers(0, 30, ns)},
+        "T": {"y": rng.integers(0, 30, nt), "z": np.arange(nt)},
+    })
+    shapes = (
+        JoinQuery((Atom.of("R", "x", "p"),), prob_var="p"),
+        JoinQuery((Atom.of("R", "x", "p"), Atom.of("S", "x", "y")),
+                  prob_var="p"),
+        JoinQuery((Atom.of("R", "x", "p"), Atom.of("S", "x", "y"),
+                   Atom.of("T", "y", "z")), prob_var="p"),
+    )
+    return db, shapes
+
+
+def _delta(i):
+    # Shape-preserving (2 in, 2 out): replicas upgrade warm caches in
+    # place at the barrier (DESIGN.md §11) — the rows below measure
+    # steady-state serving, not recompiles.
+    return DeltaBatch.of(S={"insert": {"x": [i % 40, (i + 7) % 40],
+                                       "y": [i % 30, (i + 3) % 30]},
+                            "delete": [0, 1]})
+
+
+def _serve(db, shapes, n, replicas, max_batch):
+    import jax
+
+    fleet = Fleet(db, replicas=replicas, max_batch=max_batch,
+                  max_wait_ms=2.0, max_inflight=1 << 16,
+                  retry_timeout_s=60.0, clock="real")
+    # Warm compile-time one-offs out of the latency rows (bench_throughput
+    # convention): every (shape, batch-bucket) plan on every replica —
+    # barrier flushes produce partial batches, so the whole bucket ladder
+    # is on the serving path — plus the incremental delta-apply kernels.
+    warm_key = jax.random.key(0)
+    for rep in fleet.replicas:
+        for q in shapes:
+            b = 1
+            while b <= max_batch:
+                jax.block_until_ready(
+                    rep.engine.sample_batch(q, jax.random.split(warm_key, b))
+                    .positions)
+                b *= 2
+    from repro.engine import QueryEngine
+    throwaway = QueryEngine(db)
+    for q in shapes:
+        jax.block_until_ready(throwaway.sample(q, warm_key).positions)
+    throwaway.apply_delta(_delta(0))
+    jax.block_until_ready(throwaway.sample(q, warm_key).positions)
+    return fleet
+
+
+def _pass(fleet, shapes, n, max_batch):
+    """One measured stream: batch-aligned blocks (each block fills exactly
+    one micro-batch on the shape's home replica — ``sample_batch`` traces
+    per batch size, so ragged flushes would measure compiles, not
+    serving), shapes rotating per block, a delta between blocks."""
+    n_blocks = n // max_batch
+    reqs = [JoinSampleRequest(query=shapes[i // max_batch % len(shapes)],
+                              seed=i) for i in range(n_blocks * max_batch)]
+    update_blocks = max(1, n_blocks // 4)
+    for b in range(n_blocks):
+        if b and b % update_blocks == 0:
+            fleet.submit(UpdateRequest(_delta(b)))
+        for r in reqs[b * max_batch:(b + 1) * max_batch]:
+            fleet.submit(r)
+    fleet.take_completed()
+    lats = [r.latency_s for r in reqs if r.latency_s is not None]
+    assert len(lats) == len(reqs), "fleet lost a request"
+    return lats
+
+
+def run(out):
+    n = 128 if tiny() else 320
+    reps = 5
+    max_batch = 8
+    db, shapes = _workload(nr=200 if tiny() else 400,
+                           ns=350 if tiny() else 700,
+                           nt=150 if tiny() else 300)
+    for replicas in (1, 4):
+        fleet = _serve(db, shapes, n, replicas, max_batch)
+        # The tail is dominated by barrier-adjacent flushes, so a single
+        # pass's p99 is noisy (it is nearly a max). time_fn convention at
+        # the pass level: one discarded warm pass (absorbs each replica's
+        # first-barrier one-offs), then the median percentile over reps.
+        _pass(fleet, shapes, n, max_batch)
+        p50s, p99s, maxes = [], [], []
+        for _ in range(reps):
+            lats = _pass(fleet, shapes, n, max_batch)
+            p50s.append(percentile(lats, 0.5))
+            p99s.append(percentile(lats, 0.99))
+            maxes.append(max(lats))
+        tag = f"serve/R{replicas}"
+        out(row(f"{tag}/p50", percentile(p50s, 0.5) * 1e6,
+                f"n={n};reps={reps};replicas={replicas};"
+                f"max_batch={max_batch}"))
+        out(row(f"{tag}/p99", percentile(p99s, 0.5) * 1e6,
+                f"max={max(maxes) * 1e6:.0f}us"))
+        if replicas > 1:
+            rt = fleet.router
+            total = rt.accepted + rt.rejected
+            out(row(f"{tag}/rejected-rate", 0.0,
+                    f"rate={rt.rejected / total:.4f};"
+                    f"accepted={rt.accepted};rejected={rt.rejected}"))
+            out(row(f"{tag}/retries", 0.0,
+                    f"retries={rt.retries};duplicates={rt.duplicates};"
+                    f"log_head={fleet.log.head}"))
+        fleet.drain()

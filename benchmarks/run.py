@@ -30,8 +30,8 @@ def main() -> None:
     from . import (bench_position_sampling, bench_uniform_e2e, bench_poisson,
                    bench_build_probe, bench_probe_fused, bench_full_join,
                    bench_qc, bench_caching, bench_engine_cache,
-                   bench_sharded_engine, bench_throughput, bench_updates,
-                   bench_kernels, roofline)
+                   bench_sharded_engine, bench_serve, bench_throughput,
+                   bench_updates, bench_kernels, roofline)
     suites = [
         ("fig7_position_sampling", bench_position_sampling.run),
         ("fig8_uniform_e2e", bench_uniform_e2e.run),
@@ -43,6 +43,7 @@ def main() -> None:
         ("table6_caching", bench_caching.run),
         ("engine_cache", bench_engine_cache.run),
         ("sharded_engine", bench_sharded_engine.run),
+        ("serve", bench_serve.run),
         ("throughput", bench_throughput.run),
         ("updates", bench_updates.run),
         ("kernels", bench_kernels.run),

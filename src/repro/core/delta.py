@@ -89,13 +89,28 @@ class DeltaBatch:
 
     Relations not named in the batch are shared by reference with the
     previous snapshot — a delta touching one relation copies nothing else.
+
+    ``lsn`` is the batch's log sequence number once it has been appended to
+    a replicated delta log (``launch.fleet.log.DeltaLog``, DESIGN.md §12):
+    1-based, assigned by the log at append time, ``None`` for free-standing
+    deltas. Along a log, ``snapshot.version == base_version + lsn`` — the
+    invariant that lets every replica name "the snapshot this draw must
+    read" by a single integer.
     """
 
     relations: Dict[str, RelationDelta]
+    lsn: Optional[int] = None
 
     def __post_init__(self):
         if not self.relations:
             raise ValueError("DeltaBatch must touch at least one relation")
+
+    def with_lsn(self, lsn: int) -> "DeltaBatch":
+        """The same batch stamped with a log sequence number."""
+        if self.lsn is not None and self.lsn != lsn:
+            raise ValueError(f"delta already has lsn={self.lsn}, "
+                             f"refusing to restamp as {lsn}")
+        return dataclasses.replace(self, lsn=lsn)
 
     @staticmethod
     def of(**per_relation) -> "DeltaBatch":
@@ -156,7 +171,7 @@ class DeltaBatch:
                 m[mask] = True
                 mask = m
             rels[name] = RelationDelta(delete_mask=mask, inserts=d.inserts)
-        return DeltaBatch(rels)
+        return DeltaBatch(rels, lsn=self.lsn)
 
 
 def apply_relation_delta(columns: Dict[str, jnp.ndarray],

@@ -65,7 +65,12 @@ class CacheStats:
     ``plan_upgrades`` count warm entries advanced incrementally (never
     through ``shred_builds`` — upgrading is precisely *not* rebuilding),
     and ``shards_reused`` / ``shards_rebuilt`` split the stacked-index
-    treatment per shard (DESIGN.md §11)."""
+    treatment per shard (DESIGN.md §11).
+
+    Stats are additive across engines: a replicated fleet (DESIGN.md §12)
+    reports ``CacheStats.aggregate(r.engine.stats for r in replicas)`` —
+    fingerprint-affine routing shows up there as exactly one ``plan_miss``
+    per query shape per replica that ever saw it."""
 
     shred_builds: int = 0
     shred_hits: int = 0
@@ -78,6 +83,22 @@ class CacheStats:
 
     def snapshot(self) -> "CacheStats":
         return dataclasses.replace(self)
+
+    def __add__(self, other: "CacheStats") -> "CacheStats":
+        if not isinstance(other, CacheStats):
+            return NotImplemented
+        return CacheStats(**{
+            f.name: getattr(self, f.name) + getattr(other, f.name)
+            for f in dataclasses.fields(CacheStats)})
+
+    @classmethod
+    def aggregate(cls, stats) -> "CacheStats":
+        """Fleet-wide totals: the field-wise sum over an iterable of
+        per-engine stats (empty iterable -> all-zero stats)."""
+        total = cls()
+        for s in stats:
+            total = total + s
+        return total
 
 
 @dataclasses.dataclass

@@ -1,16 +1,13 @@
-"""Serving drivers: (1) LM batched prefill + decode with a request queue
+"""Serving demos: (1) LM batched prefill + decode with a request queue
 (continuous-batching-lite) on the reduced configs, and (2) a join-sampling
-service built on ``repro.engine.QueryEngine`` — a micro-batching request
-loop (DESIGN.md §10) over the multi-tenant pattern where many concurrent
-requests (possibly over the same handful of query shapes) share one
-compiled-plan cache, so only the first request of each shape pays GYO +
-index build + XLA trace (DESIGN.md §7). Requests accumulate up to
-``--max-batch`` or ``--max-wait-ms`` and flush as ONE ``sample_batch``
-dispatch per query shape; the loop reports p50/p99 latency and draws/sec.
-``UpdateRequest``s carry database deltas and interleave with draws: each
-acts as a flush barrier, so in-flight batches always read one consistent
-snapshot version and warm plans upgrade in place between flushes
-(DESIGN.md §11).
+service — single-engine micro-batching (DESIGN.md §10) or, with
+``--replicas N``, a replicated fleet (DESIGN.md §12) behind a router with
+log-shipped deltas and an injected replica crash.
+
+The serving *library* lives in ``repro.launch.fleet`` (router, replica,
+transport, log, micro-batcher); this module is a thin demo over it and
+re-exports the single-engine names (``MicroBatcher`` & co.) so existing
+imports keep working.
 
 The decode step function is the same one the dry-run lowers for the
 decode_32k / long_500k cells (launch/dryrun.py `make_serve_step`); here it
@@ -21,13 +18,18 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro import configs
+from repro.launch.metrics import percentile
+from repro.launch.fleet import (  # noqa: F401  (re-exported public API)
+    JoinSampleRequest, MicroBatcher, Rejected, UpdateRequest,
+    serve_fleet, serve_join_samples,
+)
 from repro.models import decode_step, encode, forward, init_cache, init_model, prefill
 
 
@@ -77,169 +79,37 @@ def serve_batch(arch: str, requests: List[Request], seed: int = 0,
 
 
 # ---------------------------------------------------------------------------
-# Join-sampling service (engine-backed): micro-batching request loop
+# Join-sampling demos (engine-backed): single-engine loop and fleet
 # ---------------------------------------------------------------------------
 
-@dataclasses.dataclass
-class JoinSampleRequest:
-    """One tenant request: draw an independent Poisson sample of ``query``."""
+def _demo_stream(db, n_requests: int, updates: int):
+    """The shared demo workload: two tenant query shapes + optional
+    shape-preserving doc churn spread through the stream."""
+    from repro.core import Atom, JoinQuery
+    from repro.core.delta import DeltaBatch
 
-    query: "JoinQuery"
-    seed: int = 0
-    count: Optional[int] = None       # filled by the service
-    overflow: Optional[bool] = None   # filled by the service
-    latency_s: Optional[float] = None  # enqueue -> results routed back
-    enqueued_s: Optional[float] = None  # set by MicroBatcher.submit
-    db_version: Optional[int] = None  # snapshot version the draw was served from
-
-
-@dataclasses.dataclass
-class UpdateRequest:
-    """One tenant update: advance the engine's snapshot by ``delta`` (a
-    ``core.delta.DeltaBatch``). Serialized against draws by the micro-batch
-    loop (DESIGN.md §11): draws enqueued before the update are flushed
-    against the pre-delta snapshot first, so no in-flight batch ever mixes
-    versions."""
-
-    delta: object
-    applied_version: Optional[int] = None  # post-apply db version
-    latency_s: Optional[float] = None
-    enqueued_s: Optional[float] = None
-
-
-class MicroBatcher:
-    """Micro-batching front end over ``QueryEngine.sample_batch``
-    (DESIGN.md §10).
-
-    Requests accumulate in an arrival-ordered queue and are flushed as
-    batched dispatches when either trigger fires:
-
-      * **size** — the queue reaches ``max_batch`` requests;
-      * **deadline** — the oldest pending request has waited
-        ``max_wait_ms`` (checked by ``poll()``, which the serving loop
-        calls between arrivals).
-
-    A flush groups pending requests by query fingerprint and issues ONE
-    ``sample_batch`` dispatch per distinct shape — mixed-tenant queues
-    share the engine's plan cache (one plan per shape, reused across
-    flushes), and per-request results are routed back by lane index.
-    ``clock`` is injectable so deadline behavior is unit-testable
-    (``tests/test_serve_batcher.py``).
-
-    ``UpdateRequest``s interleave with draws (DESIGN.md §11): an update
-    acts as a barrier — pending draws flush first (reading the pre-delta
-    snapshot), then the delta is applied via ``engine.apply_delta`` (warm
-    cache entries upgrade in place, so the next flush pays no rebuild),
-    and draws submitted afterwards read the new version. Every completed
-    draw records the ``db_version`` it was served from.
-    """
-
-    def __init__(self, engine, *, max_batch: int = 64,
-                 max_wait_ms: float = 2.0, mesh=None, axes=None,
-                 clock=time.perf_counter):
-        if max_batch < 1:
-            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
-        self.engine = engine
-        self.max_batch = max_batch
-        self.max_wait_ms = max_wait_ms
-        self.mesh = mesh
-        self.axes = axes
-        self.clock = clock
-        self.pending: List[JoinSampleRequest] = []
-        self.flushes = 0
-        self.dispatches = 0
-        self.served = 0
-        self.updates_applied = 0
-
-    def submit(self, req) -> List:
-        """Enqueue one request; returns completed requests (non-empty only
-        when this arrival triggered work: a full batch for draws, or the
-        flush-then-apply barrier for updates)."""
-        req.enqueued_s = self.clock()
-        if isinstance(req, UpdateRequest):
-            return self._apply_update(req)
-        self.pending.append(req)
-        if len(self.pending) >= self.max_batch:
-            return self.flush()
-        return []
-
-    def _apply_update(self, req: UpdateRequest) -> List:
-        """The update barrier: drain pending draws on the current snapshot,
-        then advance it. In-flight batches therefore always read ONE
-        consistent version; later draws read the next."""
-        done = self.flush()
-        self.engine.apply_delta(req.delta)
-        req.applied_version = self.engine.db.version
-        req.latency_s = self.clock() - req.enqueued_s
-        self.updates_applied += 1
-        return done + [req]
-
-    def poll(self) -> List[JoinSampleRequest]:
-        """Deadline check: flush iff the oldest pending request has waited
-        at least ``max_wait_ms``. Call between arrivals / when idle."""
-        if self.pending and \
-                (self.clock() - self.pending[0].enqueued_s) * 1e3 >= self.max_wait_ms:
-            return self.flush()
-        return []
-
-    def flush(self) -> List[JoinSampleRequest]:
-        """Dispatch everything pending now (one batched draw per distinct
-        query fingerprint) and route results back to their requests."""
-        from repro.engine import query_fingerprint
-
-        batch, self.pending = self.pending, []
-        if not batch:
-            return []
-        groups: Dict[str, List[JoinSampleRequest]] = {}
-        for r in batch:
-            groups.setdefault(query_fingerprint(r.query), []).append(r)
-        version = getattr(self.engine.db, "version", 0)
-        for reqs in groups.values():
-            keys = jnp.stack([jax.random.key(r.seed) for r in reqs])
-            smp = self.engine.sample_batch(reqs[0].query, keys,
-                                           mesh=self.mesh, axes=self.axes)
-            jax.block_until_ready(smp.count)
-            done_t = self.clock()
-            counts = np.asarray(smp.count)
-            overflow = np.asarray(smp.overflow)
-            for lane, r in enumerate(reqs):
-                r.count = int(counts[lane])
-                r.overflow = bool(overflow[lane])
-                r.latency_s = done_t - r.enqueued_s
-                r.db_version = version
-            self.dispatches += 1
-        self.flushes += 1
-        self.served += len(batch)
-        return batch
-
-
-def serve_join_samples(engine, requests: List, mesh=None,
-                       max_batch: int = 64, max_wait_ms: float = 2.0,
-                       ) -> List:
-    """Serve a request list through the micro-batcher (closed loop: submit
-    everything, then drain). The list may interleave ``JoinSampleRequest``
-    draws with ``UpdateRequest`` deltas; updates barrier the stream in
-    arrival order (DESIGN.md §11). Kept as the library entry point the demo
-    and tests share; results are routed back onto the request objects."""
-    mb = MicroBatcher(engine, max_batch=max_batch, max_wait_ms=max_wait_ms,
-                      mesh=mesh)
-    done: List[JoinSampleRequest] = []
-    for r in requests:
-        done += mb.submit(r)
-        done += mb.poll()
-    done += mb.flush()  # drain the tail regardless of deadline
-    return done
-
-
-def _pctl(xs: List[float], q: float) -> float:
-    ys = sorted(xs)
-    return ys[min(len(ys) - 1, int(q * len(ys)))]
+    q_qual = JoinQuery((Atom.of("ClusterQuality", "clust", "p"),
+                        Atom.of("Doc", "doc", "clust")), prob_var="p")
+    q_flat = JoinQuery((Atom.of("ClusterQuality", "clust", "p"),),
+                       prob_var="p")
+    rng = np.random.default_rng(0)
+    reqs: List = [JoinSampleRequest(query=q_qual if i % 3 else q_flat, seed=i)
+                  for i in range(n_requests)]
+    if updates:
+        n_docs = int(db.relations["Doc"].num_rows)
+        every = max(1, n_requests // updates)
+        for u in range(updates):
+            delta = DeltaBatch.of(Doc={
+                "insert": {"doc": rng.integers(0, n_docs, 4),
+                           "clust": rng.integers(0, 64, 4)},
+                "delete": rng.choice(n_docs, size=4, replace=False)})
+            reqs.insert(min((u + 1) * every + u, len(reqs)),
+                        UpdateRequest(delta))
+    return reqs, (q_qual, q_flat)
 
 
 def _join_demo(n_requests: int, devices: int = 1, max_batch: int = 64,
                max_wait_ms: float = 2.0, updates: int = 0) -> None:
-    from repro.core import Atom, JoinQuery
-    from repro.core.delta import DeltaBatch
     from repro.data.pipeline import make_corpus_db
     from repro.engine import QueryEngine
     from repro.launch.mesh import force_host_devices
@@ -250,29 +120,10 @@ def _join_demo(n_requests: int, devices: int = 1, max_batch: int = 64,
         mesh = jax.make_mesh((n,), ("data",))
 
     db = make_corpus_db(n_docs=20_000, n_clusters=64, seq_len=8, vocab=256)
-    # Two tenant query shapes sharing one plan cache (same db, same engine).
-    q_qual = JoinQuery((Atom.of("ClusterQuality", "clust", "p"),
-                        Atom.of("Doc", "doc", "clust")), prob_var="p")
-    q_flat = JoinQuery((Atom.of("ClusterQuality", "clust", "p"),),
-                       prob_var="p")
+    reqs, (q_qual, _) = _demo_stream(db, n_requests, updates)
     engine = QueryEngine(db)
     mb = MicroBatcher(engine, max_batch=max_batch, max_wait_ms=max_wait_ms,
                       mesh=mesh)
-    rng = np.random.default_rng(0)
-    reqs: List = [JoinSampleRequest(query=q_qual if i % 3 else q_flat, seed=i)
-                  for i in range(n_requests)]
-    if updates:
-        # Shape-preserving doc churn (k in, k out) spread through the stream:
-        # warm plans upgrade in place, zero rebuilds between flushes.
-        n_docs = int(db.relations["Doc"].num_rows)
-        every = max(1, n_requests // updates)
-        for u in range(updates):
-            delta = DeltaBatch.of(Doc={
-                "insert": {"doc": rng.integers(0, n_docs, 4),
-                           "clust": rng.integers(0, 64, 4)},
-                "delete": rng.choice(n_docs, size=4, replace=False)})
-            reqs.insert(min((u + 1) * every + u, len(reqs)),
-                        UpdateRequest(delta))
     t0 = time.perf_counter()
     done: List = []
     for r in reqs:
@@ -293,14 +144,76 @@ def _join_demo(n_requests: int, devices: int = 1, max_batch: int = 64,
     print(f"[serve-join] {n_requests} requests in {mb.flushes} flushes "
           f"({mb.dispatches} dispatches){shards}  "
           f"max_batch={max_batch} max_wait={max_wait_ms}ms")
-    print(f"  draws/sec={n_requests/wall:,.0f}  latency p50={_pctl(lats, .5):.1f}ms "
-          f"p99={_pctl(lats, .99):.1f}ms  (incl. cold compile in early flushes)")
+    print(f"  draws/sec={n_requests/wall:,.0f}  "
+          f"latency p50={percentile(lats, .5):.1f}ms "
+          f"p99={percentile(lats, .99):.1f}ms  "
+          f"(incl. cold compile in early flushes)")
     print(f"  cache: shred_builds={st.shred_builds} shred_hits={st.shred_hits} "
           f"plan_hits={st.plan_hits} plan_misses={st.plan_misses}")
     if updates:
         print(f"  updates: applied={mb.updates_applied} "
               f"db_version={engine.db.version} "
               f"upgrades: shred={st.shred_upgrades} plan={st.plan_upgrades}")
+
+
+def _fleet_demo(n_requests: int, replicas: int, max_batch: int = 64,
+                max_wait_ms: float = 2.0, updates: int = 0,
+                crash: bool = True) -> None:
+    """The replicated fleet demo (DESIGN.md §12): serve the same stream
+    through ``--replicas N`` engine replicas, fail-stop one replica
+    mid-stream, and verify the results bit-identical to the single-engine
+    micro-batcher baseline per (seed, version)."""
+    from repro.data.pipeline import make_corpus_db
+    from repro.engine import QueryEngine
+
+    db = make_corpus_db(n_docs=20_000, n_clusters=64, seq_len=8, vocab=256)
+    reqs, _ = _demo_stream(db, n_requests, updates)
+    crash_at = n_requests // 2 if crash and replicas > 1 else None
+
+    t0 = time.perf_counter()
+    done, fleet = serve_fleet(
+        db, reqs, replicas=replicas, max_batch=max_batch,
+        max_wait_ms=max_wait_ms, clock="real", retry_timeout_s=30.0,
+        crash_at=crash_at, crash_replica=replicas - 1)
+    wall = time.perf_counter() - t0
+
+    draws = [r for r in done if isinstance(r, JoinSampleRequest)]
+    rejected = [r for r in done if isinstance(r, Rejected)]
+    assert len(draws) + len(rejected) == n_requests, \
+        f"lost requests: {len(draws)}+{len(rejected)} != {n_requests}"
+    assert len({id(r) for r in draws}) == len(draws), "request served twice"
+
+    # Bit-identical to the single-engine baseline, per (seed, version).
+    baseline = {}
+    for r in serve_join_samples(QueryEngine(db),
+                                _demo_stream(db, n_requests, updates)[0],
+                                max_batch=max_batch):
+        if isinstance(r, JoinSampleRequest):
+            baseline[(r.seed, r.db_version)] = (r.count, r.overflow)
+    mismatches = [r.seed for r in draws
+                  if baseline.get((r.seed, r.db_version))
+                  != (r.count, r.overflow)]
+    assert not mismatches, f"fleet != single-engine for seeds {mismatches}"
+
+    lats = [r.latency_s * 1e3 for r in draws]
+    st = fleet.stats()
+    rt = fleet.router
+    crashed = [r.name for r in fleet.replicas
+               if r.state == "down" and r.name not in rt.drained]
+    print(f"[serve-fleet] {n_requests} requests over {replicas} replicas  "
+          f"max_batch={max_batch} max_wait={max_wait_ms}ms  "
+          f"crash_injected={crash_at is not None}")
+    print(f"  draws/sec={len(draws)/wall:,.0f}  "
+          f"latency p50={percentile(lats, .5):.1f}ms "
+          f"p99={percentile(lats, .99):.1f}ms  "
+          f"rejected={len(rejected)} retries={rt.retries} "
+          f"crashed_replicas={len(crashed)}")
+    print(f"  fleet cache (aggregated): shred_builds={st.shred_builds} "
+          f"plan_misses={st.plan_misses} plan_hits={st.plan_hits} "
+          f"upgrades: shred={st.shred_upgrades} plan={st.plan_upgrades}")
+    print(f"  log: head_lsn={fleet.log.head} "
+          f"committed_version={fleet.db_version}  "
+          f"results bit-identical to single-engine baseline: OK")
 
 
 def main():
@@ -312,6 +225,9 @@ def main():
     ap.add_argument("--devices", type=int, default=1,
                     help="join mode: serve through the engine's sharded plan "
                          "on this many (virtual) host devices")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="join mode: serve through a replicated fleet of "
+                         "this many engine replicas (DESIGN.md §12)")
     ap.add_argument("--requests", type=int, default=256,
                     help="join mode: number of requests in the demo stream")
     ap.add_argument("--max-batch", type=int, default=64,
@@ -322,11 +238,20 @@ def main():
     ap.add_argument("--updates", type=int, default=0,
                     help="join mode: interleave this many shape-preserving "
                          "update requests into the demo stream")
+    ap.add_argument("--no-crash", action="store_true",
+                    help="fleet mode: skip the injected mid-stream replica "
+                         "crash")
     args = ap.parse_args()
     if args.mode == "join":
-        _join_demo(args.requests, devices=args.devices,
-                   max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
-                   updates=args.updates)
+        if args.replicas > 1:
+            _fleet_demo(args.requests, args.replicas,
+                        max_batch=args.max_batch,
+                        max_wait_ms=args.max_wait_ms, updates=args.updates,
+                        crash=not args.no_crash)
+        else:
+            _join_demo(args.requests, devices=args.devices,
+                       max_batch=args.max_batch,
+                       max_wait_ms=args.max_wait_ms, updates=args.updates)
         return
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=list(rng.integers(1, 200, rng.integers(4, 12))),

@@ -95,6 +95,95 @@ def test_regression_beats_missing_in_exit_code(tmp_path, capsys):
     assert "alpha" in err and "gamma" in err
 
 
+def test_gated_row_regression_despite_healthy_median(tmp_path, capsys):
+    """An SLO row (p99) blows past the threshold while the median over the
+    suite stays healthy: gate_rows still fails the gate with exit 1."""
+    csv = _write(tmp_path, "b.csv", """name,us_per_call,derived
+# --- serve ---
+serve/p50,100.0,
+serve/p99,500.0,
+serve/other,100.0,
+""")
+    p = tmp_path / "BENCH_serve.json"
+    p.write_text(json.dumps({
+        "suite": "serve",
+        "rows": {"serve/p50": 100.0, "serve/p99": 200.0,
+                 "serve/other": 100.0},
+        "gate_rows": ["serve/p99"]}))
+    suites = check_bench.parse_csv(csv)
+    rc = check_bench.check(suites, check_bench.load_baselines(tmp_path), 0.30)
+    assert rc == check_bench.EXIT_REGRESSED
+    assert "gated row serve/p99" in capsys.readouterr().err
+
+
+def test_gated_row_within_threshold_passes(tmp_path):
+    csv = _write(tmp_path, "b.csv", """name,us_per_call,derived
+# --- serve ---
+serve/p50,100.0,
+serve/p99,220.0,
+""")
+    p = tmp_path / "BENCH_serve.json"
+    p.write_text(json.dumps({
+        "suite": "serve",
+        "rows": {"serve/p50": 100.0, "serve/p99": 200.0},
+        "gate_rows": ["serve/p99"]}))
+    suites = check_bench.parse_csv(csv)
+    assert check_bench.check(
+        suites, check_bench.load_baselines(tmp_path), 0.30) == 0
+
+
+def test_missing_gated_row_is_coverage_failure(tmp_path, capsys):
+    """Enough rows match for the median, but the gated row itself was
+    renamed away: exit 3, not a silent pass."""
+    csv = _write(tmp_path, "b.csv", """name,us_per_call,derived
+# --- serve ---
+serve/p50,100.0,
+serve/a,100.0,
+serve/b,100.0,
+""")
+    p = tmp_path / "BENCH_serve.json"
+    p.write_text(json.dumps({
+        "suite": "serve",
+        "rows": {"serve/p50": 100.0, "serve/a": 100.0, "serve/b": 100.0,
+                 "serve/p99": 200.0},
+        "gate_rows": ["serve/p99"]}))
+    suites = check_bench.parse_csv(csv)
+    rc = check_bench.check(suites, check_bench.load_baselines(tmp_path), 0.30)
+    assert rc == check_bench.EXIT_MISSING_SUITE
+    assert "gated row 'serve/p99' missing" in capsys.readouterr().err
+
+
+def test_update_auto_gates_p99_rows_for_new_baseline(tmp_path):
+    csv = _write(tmp_path, "b.csv", """name,us_per_call,derived
+# --- serve ---
+serve/p50,100.0,
+serve/p99,200.0,
+""")
+    suites = check_bench.parse_csv(csv)
+    assert check_bench.update(suites, ["serve"], tmp_path) == 0
+    data = json.loads((tmp_path / "BENCH_serve.json").read_text())
+    assert data["gate_rows"] == ["serve/p99"]
+
+
+def test_update_preserves_and_prunes_existing_gate_rows(tmp_path):
+    """A refresh keeps hand-chosen gates (even non-p99 ones) and drops
+    gates whose rows no longer exist."""
+    p = tmp_path / "BENCH_serve.json"
+    p.write_text(json.dumps({
+        "suite": "serve",
+        "rows": {"serve/p50": 1.0, "serve/gone": 1.0},
+        "gate_rows": ["serve/p50", "serve/gone"]}))
+    csv = _write(tmp_path, "b.csv", """name,us_per_call,derived
+# --- serve ---
+serve/p50,100.0,
+serve/p99,200.0,
+""")
+    suites = check_bench.parse_csv(csv)
+    assert check_bench.update(suites, ["serve"], tmp_path) == 0
+    data = json.loads(p.read_text())
+    assert data["gate_rows"] == ["serve/p50"]  # kept, pruned, NOT auto-p99
+
+
 def test_update_writes_baseline(tmp_path):
     csv = _write(tmp_path, "b.csv", CSV)
     suites = check_bench.parse_csv(csv)

@@ -1,0 +1,208 @@
+"""Fault injection over the fleet (DESIGN.md §12): crash a replica
+mid-flush, delay a replica's delta application past a version barrier,
+drop transport messages — and in every case the router's *exact* retry
+(draws are pure given seed + version) completes every accepted request at
+its stamped version, with nothing lost and nothing served twice.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Atom, Database, JoinQuery
+from repro.core.delta import DeltaBatch
+from repro.engine import QueryEngine, query_fingerprint
+from repro.launch.fleet import (
+    CRASH, DOWN, DROP, FaultInjector, Fleet, JoinSampleRequest, Rejected,
+    UpdateRequest,
+)
+
+
+@pytest.fixture(scope="module")
+def db():
+    rng = np.random.default_rng(3)
+    return Database.from_columns({
+        "R": {"x": rng.integers(0, 10, 70), "p": rng.random(70) * 0.5},
+        "S": {"x": rng.integers(0, 10, 110), "y": rng.integers(0, 8, 110)},
+    })
+
+
+@pytest.fixture(scope="module")
+def q(db):
+    return JoinQuery((Atom.of("R", "x", "p"), Atom.of("S", "x", "y")),
+                     prob_var="p")
+
+
+def _delta(i=0):
+    return DeltaBatch.of(S={"insert": {"x": [i % 10, (i + 3) % 10],
+                                       "y": [i % 8, (i + 1) % 8]},
+                            "delete": [0]})
+
+
+def _check_complete_and_unique(accepted, done):
+    """The fleet invariant: every accepted request completes exactly once
+    (nothing lost, nothing delivered twice)."""
+    draws = [r for r in done if isinstance(r, JoinSampleRequest)]
+    assert {id(r) for r in draws} == {id(r) for r in accepted}
+    assert len(draws) == len(accepted)
+    assert all(r.count is not None and r.db_version is not None
+               for r in draws)
+
+
+# -- crash a replica mid-flush ----------------------------------------------
+
+def test_crash_mid_flush_retries_on_healthy_replica(db, q):
+    faults = FaultInjector()
+    fleet = Fleet(db, replicas=3, max_batch=4, max_wait_ms=1e9,
+                  faults=faults, retry_timeout_s=0.05)
+    home = fleet.router._route(query_fingerprint(q))
+    # the 2nd flush on the home replica dies with the whole batch pending
+    faults.inject(f"{home}:flush", CRASH, at=2)
+    accepted = [JoinSampleRequest(query=q, seed=i) for i in range(12)]
+    for r in accepted:
+        assert fleet.submit(r) is None
+    done = fleet.drain()
+    _check_complete_and_unique(accepted, done)
+    assert faults.pending == 0  # the fault really fired
+    assert fleet.router.health[home] == DOWN
+    assert fleet.router.retries >= 4  # the lost batch was re-sent
+    # results are still bit-identical to a cold single engine per seed
+    ref = QueryEngine(db)
+    for r in accepted:
+        assert r.db_version == 0
+        want = ref.sample(q, jax.random.key(r.seed))
+        assert (r.count, r.overflow) == (int(want.count), bool(want.overflow))
+
+
+def test_crash_during_catchup_apply(db, q):
+    """A replica dying while applying a log delta at the barrier: the
+    stamped draw that forced the barrier is retried elsewhere and still
+    completes at its stamped (post-delta) version."""
+    faults = FaultInjector()
+    fleet = Fleet(db, replicas=2, max_batch=100, max_wait_ms=1e9,
+                  faults=faults, retry_timeout_s=0.05)
+    home = fleet.router._route(query_fingerprint(q))
+    faults.inject(f"{home}:apply", CRASH)
+    fleet.submit(UpdateRequest(_delta()))
+    r = JoinSampleRequest(query=q, seed=5)  # stamped v1 -> forces catch-up
+    assert fleet.submit(r) is None
+    done = fleet.drain()
+    assert faults.pending == 0
+    assert r in done and r.db_version == 1
+    want = QueryEngine(db.apply(_delta())).sample(q, jax.random.key(5))
+    assert r.count == int(want.count)
+
+
+# -- delay delta application past a version barrier --------------------------
+
+def test_delayed_draw_crosses_version_barrier_exact_stale_serve(db, q):
+    """Delay the wire so a draw stamped v0 reaches its replica only after
+    the replica has applied the v1 delta: the replica serves it from its
+    v0 snapshot — exactly the stamped version, not the newer one."""
+    faults = FaultInjector()
+    fleet = Fleet(db, replicas=2, max_batch=1, max_wait_ms=1e9,
+                  faults=faults, retry_timeout_s=10.0)
+    home = fleet.router._route(query_fingerprint(q))
+    # the 1st draw to the home replica is delayed 10ms
+    faults.inject(f"deliver:router->{home}", ("delay", 0.010))
+    old = JoinSampleRequest(query=q, seed=1)
+    fleet.submit(old)                        # stamped v0, delayed in flight
+    fleet.submit(UpdateRequest(_delta()))    # commits v1
+    new = JoinSampleRequest(query=q, seed=2)
+    fleet.submit(new)                        # stamped v1, arrives FIRST
+    done = fleet.advance(0.02) + fleet.drain()
+    assert faults.pending == 0
+    _check_complete_and_unique([old, new], done)
+    # the barrier was crossed while `old` was in flight...
+    assert new.db_version == 1 and old.db_version == 0
+    home_rep = next(r for r in fleet.replicas if r.name == home)
+    assert home_rep.stale_serves == 1  # ...and served from the v0 snapshot
+    ref0 = QueryEngine(db)
+    ref1 = QueryEngine(db.apply(_delta()))
+    assert old.count == int(ref0.sample(q, jax.random.key(1)).count)
+    assert new.count == int(ref1.sample(q, jax.random.key(2)).count)
+
+
+# -- drop transport messages -------------------------------------------------
+
+def test_dropped_request_message_is_retried(db, q):
+    faults = FaultInjector()
+    fleet = Fleet(db, replicas=2, max_batch=1, max_wait_ms=1e9,
+                  faults=faults, retry_timeout_s=0.05)
+    home = fleet.router._route(query_fingerprint(q))
+    faults.inject(f"deliver:router->{home}", DROP)
+    r = JoinSampleRequest(query=q, seed=3)
+    fleet.submit(r)
+    assert fleet.take_completed() == []  # the draw vanished on the wire
+    done = fleet.advance(0.06)  # retry timer fires, re-sends
+    assert faults.pending == 0 and fleet.router.retries == 1
+    assert done == [r] and r.count is not None
+    want = QueryEngine(db).sample(q, jax.random.key(3))
+    assert r.count == int(want.count)
+
+
+def test_dropped_response_message_served_once_completed_once(db, q):
+    """The response (not the request) drops: the retried draw hits the
+    replica's served-cache and is answered idempotently — the client gets
+    exactly one completion and the engine never recomputes."""
+    faults = FaultInjector()
+    fleet = Fleet(db, replicas=2, max_batch=1, max_wait_ms=1e9,
+                  faults=faults, retry_timeout_s=0.05)
+    home = fleet.router._route(query_fingerprint(q))
+    faults.inject(f"deliver:{home}->router", DROP)
+    r = JoinSampleRequest(query=q, seed=4)
+    fleet.submit(r)
+    assert fleet.take_completed() == []  # served, but the response dropped
+    home_rep = next(x for x in fleet.replicas if x.name == home)
+    dispatches_after_serve = home_rep.batcher.dispatches
+    done = fleet.advance(0.06)
+    assert faults.pending == 0
+    assert done == [r] and r.count is not None
+    assert home_rep.duplicates == 1  # answered from the served cache
+    assert home_rep.batcher.dispatches == dispatches_after_serve  # no recompute
+    drained = fleet.drain()
+    assert drained == []  # nothing pending anywhere
+    want = QueryEngine(db).sample(q, jax.random.key(4))
+    assert r.count == int(want.count)
+
+
+# -- the drain invariant under a mixed fault plan ----------------------------
+
+def test_mixed_faults_drain_loses_nothing(db, q):
+    """One crash + one drop + one delay in a single interleaved stream of
+    draws and updates: the fleet drains with every accepted request
+    completed at its stamped version, none lost, none duplicated."""
+    faults = FaultInjector()
+    fleet = Fleet(db, replicas=3, max_batch=3, max_wait_ms=1e9,
+                  faults=faults, retry_timeout_s=0.05)
+    home = fleet.router._route(query_fingerprint(q))
+    successor = fleet.replicas[
+        (next(i for i, r in enumerate(fleet.replicas) if r.name == home) + 1)
+        % 3].name
+    faults.inject(f"deliver:router->{home}", ("delay", 0.005), at=2)
+    faults.inject(f"{home}:flush", CRASH, at=3)
+    faults.inject(f"deliver:{successor}->router", DROP, at=1)
+    accepted, done, dbs = [], [], [db]
+    for i in range(18):
+        if i % 6 == 5:
+            fleet.submit(UpdateRequest(_delta(i)))
+            dbs.append(dbs[-1].apply(_delta(i)))
+        else:
+            r = JoinSampleRequest(query=q, seed=100 + i)
+            res = fleet.submit(r)
+            assert not isinstance(res, Rejected)
+            accepted.append(r)
+        done += fleet.advance(0.001)
+    done += fleet.advance(0.1)  # let retry timers fire
+    done += fleet.drain()
+    done = [x for x in done if isinstance(x, JoinSampleRequest)]
+    _check_complete_and_unique(accepted, done)
+    # every draw matches a cold engine at its stamped version
+    refs = {}
+    for r in accepted:
+        eng = refs.setdefault(r.db_version, QueryEngine(dbs[r.db_version]))
+        want = eng.sample(q, jax.random.key(r.seed))
+        assert (r.count, r.overflow) == (int(want.count), bool(want.overflow))
+    # replicas that survived converged to the log head
+    for rep in fleet.replicas:
+        if rep.name in fleet.router.drained:
+            assert rep.engine.db.version == fleet.db_version

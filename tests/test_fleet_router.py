@@ -1,0 +1,179 @@
+"""Router behavior (DESIGN.md §12): admission control / backpressure,
+fingerprint-affine routing observed through aggregated CacheStats, and
+reproducible deadline flushes under the injectable clock.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Atom, Database, JoinQuery
+from repro.core.delta import DeltaBatch
+from repro.engine import CacheStats, QueryEngine, query_fingerprint
+from repro.launch.fleet import (
+    DOWN, Fleet, JoinSampleRequest, Rejected, UpdateRequest, serve_fleet,
+)
+
+
+@pytest.fixture(scope="module")
+def db():
+    rng = np.random.default_rng(7)
+    return Database.from_columns({
+        "R": {"x": rng.integers(0, 10, 60), "p": rng.random(60) * 0.5},
+        "S": {"x": rng.integers(0, 10, 90), "y": rng.integers(0, 8, 90)},
+        "T": {"y": rng.integers(0, 8, 40), "z": np.arange(40)},
+    })
+
+
+@pytest.fixture(scope="module")
+def shapes(db):
+    q1 = JoinQuery((Atom.of("R", "x", "p"),), prob_var="p")
+    q2 = JoinQuery((Atom.of("R", "x", "p"), Atom.of("S", "x", "y")),
+                   prob_var="p")
+    q3 = JoinQuery((Atom.of("R", "x", "p"), Atom.of("S", "x", "y"),
+                    Atom.of("T", "y", "z")), prob_var="p")
+    return (q1, q2, q3)
+
+
+# -- backpressure ------------------------------------------------------------
+
+def test_admission_queue_full_returns_rejected_never_drops(db, shapes):
+    fleet = Fleet(db, replicas=2, max_batch=100, max_wait_ms=1e9,
+                  max_inflight=4)
+    accepted, rejected = [], []
+    for i in range(7):
+        req = JoinSampleRequest(query=shapes[0], seed=i)
+        res = fleet.submit(req)
+        (accepted if res is None else rejected).append(res or req)
+    # the window is 4: requests 5-7 got explicit Rejected responses
+    assert len(accepted) == 4 and len(rejected) == 3
+    assert all(isinstance(r, Rejected) for r in rejected)
+    assert all("queue full" in r.reason for r in rejected)
+    assert fleet.router.rejected == 3
+    # nothing was silently dropped: every accepted request completes...
+    done = fleet.drain()
+    assert {id(r) for r in done} == {id(r) for r in accepted}
+    assert all(r.count is not None for r in accepted)
+    # ...and the rejected ones were never admitted anywhere
+    assert fleet.router.accepted == 4
+
+
+def test_rejected_request_can_be_resubmitted(db, shapes):
+    fleet = Fleet(db, replicas=1, max_batch=100, max_wait_ms=5.0,
+                  max_inflight=2)
+    fleet.submit(JoinSampleRequest(query=shapes[0], seed=1))
+    fleet.submit(JoinSampleRequest(query=shapes[0], seed=2))
+    r3 = JoinSampleRequest(query=shapes[0], seed=3)
+    assert isinstance(fleet.submit(r3), Rejected)  # window full
+    assert len(fleet.advance(0.005)) == 2  # deadline flush clears the window
+    assert fleet.submit(r3) is None  # resubmission admitted
+    fleet.drain()
+    assert r3.count is not None
+
+
+def test_drained_fleet_rejects_new_work(db, shapes):
+    fleet = Fleet(db, replicas=2)
+    fleet.submit(JoinSampleRequest(query=shapes[0], seed=0))
+    fleet.drain()
+    res = fleet.submit(JoinSampleRequest(query=shapes[0], seed=1))
+    assert isinstance(res, Rejected) and "no healthy replicas" in res.reason
+    assert all(h == DOWN for h in fleet.health().values())
+
+
+# -- affinity ----------------------------------------------------------------
+
+def test_affinity_one_plan_miss_per_shape_per_replica(db, shapes):
+    """Fingerprint-affine routing: each shape compiles on exactly ONE
+    replica, so fleet-wide plan misses == number of distinct shapes even
+    with every shape drawn many times."""
+    fleet = Fleet(db, replicas=3, max_batch=4, max_wait_ms=1e9)
+    for i in range(24):
+        assert fleet.submit(
+            JoinSampleRequest(query=shapes[i % 3], seed=i)) is None
+    done = fleet.drain()
+    assert len(done) == 24
+    agg = fleet.stats()
+    assert agg.plan_misses == len(shapes)
+    assert agg.shred_builds == len(shapes)
+    # and the aggregate really is the field-wise sum over replicas
+    manual = CacheStats.aggregate(r.engine.stats for r in fleet.replicas)
+    assert agg == manual
+    # per-replica: a replica either homes a shape (>=1 miss) or never saw it
+    homed = sum(1 for r in fleet.replicas if r.engine.stats.plan_misses)
+    assert sum(r.engine.stats.plan_misses for r in fleet.replicas) == 3
+    assert homed <= 3
+
+
+def test_affinity_is_stable_across_runs(db, shapes):
+    """The home replica comes from a stable hash (md5, not the salted
+    builtin), so two identical fleets route identically."""
+    def homes():
+        fleet = Fleet(db, replicas=4)
+        return [fleet.router._route(query_fingerprint(q)) for q in shapes]
+    assert homes() == homes()
+
+
+# -- injectable clock / deadlines -------------------------------------------
+
+def test_deadline_flush_is_clock_driven_and_reproducible(db, shapes):
+    def run():
+        fleet = Fleet(db, replicas=2, max_batch=100, max_wait_ms=5.0)
+        req = JoinSampleRequest(query=shapes[1], seed=9)
+        fleet.submit(req)
+        assert fleet.advance(0.004) == []      # 4ms < 5ms: still pending
+        done = fleet.advance(0.002)            # deadline passed at 5ms
+        assert [id(r) for r in done] == [id(req)]
+        return req.latency_s
+    lat_a, lat_b = run(), run()
+    # sim-time latency is exact and identical between runs: enqueue at t=0,
+    # timer fires at t=5ms, response delivered at the same instant
+    assert lat_a == lat_b == pytest.approx(0.005)
+
+
+def test_update_commits_at_log_append(db, shapes):
+    fleet = Fleet(db, replicas=2, max_batch=100, max_wait_ms=1e9)
+    before = JoinSampleRequest(query=shapes[1], seed=0)
+    fleet.submit(before)
+    upd = UpdateRequest(DeltaBatch.of(
+        S={"insert": {"x": [1, 2], "y": [3, 4]}, "delete": [0]}))
+    assert fleet.submit(upd) is None
+    assert upd.applied_version == 1  # committed immediately (log append)
+    assert fleet.log.entry(1).lsn == 1
+    after = JoinSampleRequest(query=shapes[1], seed=1)
+    fleet.submit(after)
+    fleet.drain()
+    # version stamps straddle the update; both draws match their snapshots
+    assert before.db_version == 0 and after.db_version == 1
+    ref = QueryEngine(db)
+    import jax
+    want0 = ref.sample(shapes[1], jax.random.key(0))
+    want1 = QueryEngine(db.apply(upd.delta)).sample(shapes[1],
+                                                    jax.random.key(1))
+    assert before.count == int(want0.count)
+    assert after.count == int(want1.count)
+
+
+def test_serve_fleet_closed_loop_equals_baseline(db, shapes):
+    from repro.launch.fleet import serve_join_samples
+
+    def stream():
+        s = []
+        for i in range(17):
+            s.append(JoinSampleRequest(query=shapes[i % 3], seed=i))
+            if i % 6 == 5:
+                s.append(UpdateRequest(DeltaBatch.of(
+                    S={"insert": {"x": [i], "y": [i % 8]}})))
+        return s
+
+    done, fleet = serve_fleet(db, stream(), replicas=3, max_batch=4,
+                              collect_rows=True)
+    draws = [r for r in done if isinstance(r, JoinSampleRequest)]
+    assert len(draws) == 17
+    base = {(r.seed, r.db_version): r
+            for r in serve_join_samples(QueryEngine(db), stream(),
+                                        max_batch=4, collect_rows=True)
+            if isinstance(r, JoinSampleRequest)}
+    for r in draws:
+        b = base[(r.seed, r.db_version)]
+        assert (r.count, r.overflow) == (b.count, b.overflow)
+        assert set(r.rows) == set(b.rows)
+        for c in b.rows:
+            assert np.array_equal(r.rows[c], b.rows[c])

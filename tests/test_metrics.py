@@ -1,0 +1,59 @@
+"""Nearest-rank percentile (launch/metrics.py): the estimator the serve
+loop, fleet router, and serve benchmark all report through.
+
+The bug this replaces: ``int(q * len(ys))`` as a 0-based index is one rank
+high — p50 of [1,2,3,4] returned 3 and p99 overshot on short lists.
+"""
+import pytest
+
+from repro.launch.metrics import latency_summary, percentile
+
+
+def test_p50_even_length_is_lower_median():
+    # nearest-rank: ceil(0.5 * 4) = 2nd smallest
+    assert percentile([1, 2, 3, 4], 0.5) == 2
+    assert percentile([4, 3, 2, 1], 0.5) == 2  # order-insensitive
+
+
+def test_p50_odd_length_is_middle():
+    assert percentile([5, 1, 3], 0.5) == 3
+
+
+def test_p99_short_list_is_max_only_when_rank_says_so():
+    # N=4: ceil(0.99*4)=4 -> max; that's the correct nearest-rank answer.
+    assert percentile([1, 2, 3, 4], 0.99) == 4
+    # N=200: ceil(0.99*200)=198 -> NOT the max (the old impl indexed
+    # int(0.99*200)=198 0-based = the 199th value, overshooting by a rank).
+    xs = list(range(1, 201))
+    assert percentile(xs, 0.99) == 198
+
+
+def test_extremes_and_singleton():
+    assert percentile([7.5], 0.5) == 7.5
+    assert percentile([1, 2, 3], 0.0) == 1  # rank clamps to 1
+    assert percentile([1, 2, 3], 1.0) == 3
+
+
+def test_known_quartiles():
+    # Classic nearest-rank example: ceil(q*N) over a 10-sample list.
+    xs = [15, 20, 35, 40, 50, 55, 60, 70, 80, 90]
+    assert percentile(xs, 0.3) == 35   # ceil(3.0) = 3rd
+    assert percentile(xs, 0.35) == 40  # ceil(3.5) = 4th
+    assert percentile(xs, 0.9) == 80   # ceil(9.0) = 9th
+
+
+def test_validation():
+    with pytest.raises(ValueError, match="empty"):
+        percentile([], 0.5)
+    with pytest.raises(ValueError, match="q must be"):
+        percentile([1.0], 1.5)
+    with pytest.raises(ValueError, match="q must be"):
+        percentile([1.0], -0.1)
+
+
+def test_latency_summary_units_and_empty():
+    s = latency_summary([0.001, 0.002, 0.004])
+    assert s["p50_ms"] == pytest.approx(2.0)
+    assert s["max_ms"] == pytest.approx(4.0)
+    assert latency_summary([]) == {"p50_ms": 0.0, "p99_ms": 0.0,
+                                   "max_ms": 0.0}

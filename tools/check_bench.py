@@ -11,6 +11,11 @@ baselined suite:
     (robust to one noisy row, scale-free across row magnitudes);
   * the gate fails with exit code 1 when the median ratio exceeds
     ``1 + threshold`` (default 0.30: a >30% median slowdown);
+  * a baseline may additionally name ``gate_rows``: rows gated
+    INDIVIDUALLY at the same threshold, for SLO-style metrics (a p99
+    latency row) where a regression must not hide behind a healthy
+    median. A gated row absent from the fresh CSV is a coverage failure
+    (exit 3) even when enough other rows matched;
   * it fails with the distinct exit code 3 when a baselined suite is
     missing from the CSV or fewer than half its baseline rows matched —
     a renamed/dropped suite is a *coverage* failure, not a perf
@@ -68,11 +73,13 @@ def parse_csv(path: Path):
 
 
 def load_baselines(root: Path):
-    """{suite: (path, rows)} for every BENCH_*.json in the repo root."""
+    """{suite: (path, rows, gate_rows)} for every BENCH_*.json in the repo
+    root. ``gate_rows`` (optional in the JSON) lists row names gated
+    individually in addition to the suite median."""
     out = {}
     for f in sorted(root.glob("BENCH_*.json")):
         data = json.loads(f.read_text())
-        out[data["suite"]] = (f, data["rows"])
+        out[data["suite"]] = (f, data["rows"], data.get("gate_rows", []))
     return out
 
 
@@ -82,7 +89,7 @@ def check(suites, baselines, threshold: float) -> int:
               "nothing to gate", file=sys.stderr)
         return 0
     regressions, missing = [], []
-    for suite, (path, base_rows) in baselines.items():
+    for suite, (path, base_rows, gate_rows) in baselines.items():
         if suite not in suites:
             missing.append(
                 f"{suite}: baselined suite missing from the CSV — was it "
@@ -112,6 +119,26 @@ def check(suites, baselines, threshold: float) -> int:
                 f"{r} {base_rows[r]:.0f}->{csv_rows[r]:.0f}us" for r in worst)
             regressions.append(f"{suite}: median ratio {med:.3f} > "
                                f"{1 + threshold:.2f} (worst: {detail})")
+        # SLO rows: gated one-by-one — a p99 blowup must not hide behind
+        # a healthy median over the other rows.
+        for r in gate_rows:
+            if r not in base_rows or base_rows[r] <= 0:
+                continue  # stale gate entry; the update path prunes these
+            if r not in csv_rows:
+                missing.append(
+                    f"{suite}: gated row {r!r} missing from the CSV — "
+                    f"renamed? refresh {path.name} with "
+                    f"`check_bench.py --csv <csv> --update {suite}`")
+                continue
+            ratio = csv_rows[r] / base_rows[r]
+            status = "ok" if ratio <= 1 + threshold else "REGRESSED"
+            print(f"check_bench: {suite}: gated row {r}: ratio {ratio:.3f} "
+                  f"({base_rows[r]:.0f}->{csv_rows[r]:.0f}us) {status}")
+            if ratio > 1 + threshold:
+                regressions.append(
+                    f"{suite}: gated row {r} ratio {ratio:.3f} > "
+                    f"{1 + threshold:.2f} "
+                    f"({base_rows[r]:.0f}->{csv_rows[r]:.0f}us)")
     if regressions or missing:
         print("check_bench: FAILED", file=sys.stderr)
         for f in regressions + missing:
@@ -133,10 +160,20 @@ def update(suites, names, root: Path) -> int:
         return 2
     for name in names:
         path = root / f"BENCH_{name}.json"
-        path.write_text(json.dumps(
-            {"suite": name, "rows": suites[name]}, indent=2, sort_keys=True)
-            + "\n")
-        print(f"check_bench: wrote {path} ({len(suites[name])} rows)")
+        rows = suites[name]
+        # Refreshing a baseline keeps its SLO row gates (pruned to rows
+        # that still exist); a brand-new baseline auto-gates p99 rows.
+        if path.is_file():
+            prev = json.loads(path.read_text()).get("gate_rows", [])
+            gate_rows = [r for r in prev if r in rows]
+        else:
+            gate_rows = sorted(r for r in rows if "p99" in r)
+        data = {"suite": name, "rows": rows}
+        if gate_rows:
+            data["gate_rows"] = gate_rows
+        path.write_text(json.dumps(data, indent=2, sort_keys=True) + "\n")
+        gated = f", {len(gate_rows)} gated" if gate_rows else ""
+        print(f"check_bench: wrote {path} ({len(rows)} rows{gated})")
     return 0
 
 
