@@ -1,0 +1,104 @@
+"""Training data plane: engine-batched source vs the legacy per-step loop.
+
+The pre-§13 data pipeline drew ONE ``engine.sample`` per training step and
+gathered token rows on the host — a host dispatch plus a device->host
+count sync per step, which dominates once the plan cache is warm (the
+same dispatch-bound regime as bench_throughput's serving rows).
+``data.PoissonJoinSource`` replaces it with one ``sample_batch`` dispatch
+per ``window`` steps and a jitted on-device gather (DESIGN.md §13), so
+the per-step cost is the amortized window dispatch.
+
+Rows (per-step microseconds, batch held constant across sizes so row
+names are stable for the baseline):
+
+  pipeline/legacy-per-step   one sample + host gather per step
+  pipeline/batched-per-step  windowed source, eager ring prefetch
+
+The headline claim — batched >= 5x legacy in the dispatch-bound regime —
+is reported as a derived speedup and enforced by the committed
+``BENCH_pipeline.json`` baseline: ``pipeline/batched-per-step`` is listed
+in ``gate_rows``, so tools/check_bench.py gates it individually and a
+regression back toward per-step dispatch cannot hide behind the suite
+median.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.data import PoissonJoinSource, make_corpus_db
+from repro.engine import QueryEngine
+from .timing import row, tiny
+
+BATCH = 8
+WINDOW = 32  # throughput-oriented window (the source default, 8, favors
+             # latency; per-step cost is the window dispatch amortized)
+
+
+def _median_us_per_step(consume, start: int, steps: int, reps: int) -> float:
+    """Wall-time per step over ``reps`` disjoint step ranges (windows are
+    consumed once; re-running the same steps would hit the ring)."""
+    times = []
+    cursor = start
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        consume(cursor, steps)
+        times.append(time.perf_counter() - t0)
+        cursor += steps
+    times.sort()
+    return times[len(times) // 2] / steps * 1e6
+
+
+def run(out):
+    steps = 32 if tiny() else 96
+    seq = 33 if tiny() else 65
+    db = make_corpus_db(512 if tiny() else 4096, 16 if tiny() else 64,
+                        seq, 1000, seed=0)
+    engine = QueryEngine(db)
+    src = PoissonJoinSource(None, seq, BATCH, seed=0, engine=engine,
+                            window=WINDOW)
+
+    # -- legacy per-step loop: sample, sync the count, gather on host ------
+    key = jax.random.key(0)
+    tokens_np = np.asarray(
+        engine.db.relations["_tokens"].column("flat")).reshape(-1, seq)
+
+    def legacy(s0, n):
+        for s in range(s0, s0 + n):
+            smp = engine.sample(src.query, jax.random.fold_in(key, s),
+                                cap=src.cap)
+            k = max(int(smp.count), 1)           # host sync per step
+            docs = np.asarray(smp.columns["doc"])[:k]
+            sel = docs[np.arange(BATCH) % k]
+            toks = tokens_np[sel].astype(np.int32)
+            _ = toks[:, :-1], toks[:, 1:]
+
+    legacy(0, 2)  # warm the single-draw trace
+    us_legacy = _median_us_per_step(legacy, 2, steps, reps=3)
+    out(row("pipeline/legacy-per-step", us_legacy,
+            f"steps_per_s={1e6 / us_legacy:.0f};batch={BATCH}"))
+
+    # -- engine-batched source: one dispatch per window, device gather -----
+    def batched(s0, n):
+        last = None
+        for s in range(s0, s0 + n):
+            last = src.batch_at(s)
+        jax.block_until_ready(last["tokens"])
+
+    batched(0, WINDOW)  # warm: batched trace + gather jit + ring fill
+    us_batched = _median_us_per_step(batched, WINDOW, steps, reps=3)
+    speedup = us_legacy / us_batched
+    out(row("pipeline/batched-per-step", us_batched,
+            f"steps_per_s={1e6 / us_batched:.0f};window={WINDOW};"
+            f"vs_legacy={speedup:.1f}x"))
+    out(row("pipeline/speedup-vs-legacy", 0.0,
+            f"batched/legacy={speedup:.1f}x"))
+    if speedup < 5.0:
+        # Enforcement lives in tools/check_bench.py against the committed
+        # baseline (robust to one noisy run); this is the loud local hint.
+        print(f"# pipeline: batched source only {speedup:.2f}x the legacy "
+              "per-step loop (expected >= 5x dispatch-bound)",
+              file=sys.stderr)

@@ -10,7 +10,8 @@ from __future__ import annotations
 
 import jax
 
-from repro.core import PoissonSampler, yannakakis
+from repro.core import yannakakis
+from repro.engine import QueryEngine
 from .timing import row, time_fn, tiny
 from .workloads import qc_workload
 
@@ -20,7 +21,7 @@ POPS = (500, 1000, 2000, 4000)
 def run(out):
     for pop in ((200, 400) if tiny() else POPS):
         db, q = qc_workload(n_persons=pop, n_pools=max(pop // 40, 4))
-        s = PoissonSampler(db, q, rep="usr", method="exprace")
+        s = QueryEngine(db, rep="usr").compile(q, method="exprace")
         n, ek = s.join_size, s.expected_k()
         us_ip = time_fn(lambda k: s.sample(k), jax.random.key(0), reps=3)
         out(row(f"fig10/qc/pop={pop}/I&P", us_ip, f"|Q|={n};E[k]={ek:.0f}"))

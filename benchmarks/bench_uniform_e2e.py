@@ -12,7 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core import PoissonSampler, build_shred, yannakakis
+from repro.core import build_shred, yannakakis
+from repro.engine import QueryEngine
 from .timing import row, time_fn, tiny
 from .workloads import job_like, stats_like
 
@@ -24,8 +25,9 @@ def _ps():
 
 
 def _bench_suite(name, db, q, out):
-    sampler_u = PoissonSampler(db, q, rep="usr")
-    sampler_c = PoissonSampler(db, q, rep="csr")
+    engine = QueryEngine(db)
+    sampler_u = engine.compile(q, rep="usr")
+    sampler_c = engine.compile(q, rep="csr")
     n = sampler_u.join_size
 
     # index build (amortized per Monte-Carlo loop, reported separately)

@@ -31,7 +31,7 @@ def main() -> None:
                    bench_build_probe, bench_probe_fused, bench_full_join,
                    bench_qc, bench_caching, bench_engine_cache,
                    bench_sharded_engine, bench_serve, bench_throughput,
-                   bench_updates, bench_kernels, roofline)
+                   bench_updates, bench_pipeline, bench_kernels, roofline)
     suites = [
         ("fig7_position_sampling", bench_position_sampling.run),
         ("fig8_uniform_e2e", bench_uniform_e2e.run),
@@ -46,6 +46,7 @@ def main() -> None:
         ("serve", bench_serve.run),
         ("throughput", bench_throughput.run),
         ("updates", bench_updates.run),
+        ("pipeline", bench_pipeline.run),
         ("kernels", bench_kernels.run),
         ("roofline", roofline.run),
     ]

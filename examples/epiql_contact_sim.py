@@ -17,7 +17,8 @@ import argparse
 import jax
 import numpy as np
 
-from repro.core import Atom, Database, JoinQuery, PoissonSampler
+from repro.core import Atom, Database, JoinQuery
+from repro.engine import QueryEngine
 
 
 def build_population(pop: int, pools: int, ages: int, seed: int):
@@ -54,7 +55,7 @@ def main():
     args = ap.parse_args()
 
     db, q = build_population(args.pop, args.pools, args.ages, seed=0)
-    sampler = PoissonSampler(db, q)
+    sampler = QueryEngine(db).compile(q)  # index built once, probed daily
     print(f"population={args.pop}  contact-join size={sampler.join_size:,} "
           f"(never materialized)  E[contacts/day]={sampler.expected_k():.0f}")
 

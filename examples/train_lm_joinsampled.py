@@ -1,29 +1,111 @@
-"""End-to-end training driver: an LM trained on batches drawn by Poisson
-sampling over a joined corpus (quality-weighted data selection — the paper's
-technique as a first-class data-pipeline feature, DESIGN.md §2).
+"""End-to-end training on an engine-native, *live* Poisson-join corpus.
 
-Default: the reduced smollm-family config, a few hundred steps on CPU with
-checkpoint/resume and the straggler watchdog active.
+An LM trains on batches drawn by Poisson sampling over a joined corpus
+(quality-weighted data selection — the paper's technique as a first-class
+data-pipeline feature, DESIGN.md §2/§13), while the corpus itself moves
+mid-run: a scheduled ``DeltaBatch`` inserts and retires documents at a
+step-aligned version barrier through ``engine.apply_delta``.
 
-    PYTHONPATH=src python examples/train_lm_joinsampled.py --steps 300
+Run as an integration test (the default), this script executes the full
+determinism contract:
 
-Full 135M run (same code path, sized for real hardware):
-    PYTHONPATH=src python examples/train_lm_joinsampled.py --full --steps 300
+  1. run A trains ``--steps`` straight through, with a corpus delta at
+     ``--delta-step``;
+  2. run B trains the same config but is "killed" after ``--kill-at``
+     steps, then restarted — resume replays the delta schedule from the
+     base snapshot and the checkpoint's recorded ``data_version`` is
+     verified against it;
+  3. losses AND sampled doc ids of the resumed run must be bit-identical
+     to run A's, and the per-step ``db_version`` trace must flip exactly
+     at the barrier.
+
+    PYTHONPATH=src python examples/train_lm_joinsampled.py
+
+Plain training (no kill/resume verification; sized for real hardware with
+``--full``):
+
+    PYTHONPATH=src python examples/train_lm_joinsampled.py --train-only --steps 300
 """
 import argparse
+import dataclasses
+import tempfile
+from pathlib import Path
 
+import numpy as np
+
+from repro import configs
+from repro.data import corpus_delta, make_corpus_db
 from repro.launch.train import TrainConfig, train
+
+
+def _delta_schedule(tc: TrainConfig, delta_step: int):
+    """The live-corpus event: built against the *same* deterministic base
+    snapshot ``train()`` constructs, so a restarted process re-derives the
+    identical schedule from the config alone."""
+    cfg = configs.get_config(tc.arch)
+    if tc.reduced:
+        cfg = configs.reduced(cfg)
+    db = make_corpus_db(n_docs=512, n_clusters=16, seq_len=tc.seq_len + 1,
+                        vocab=cfg.vocab, seed=tc.seed)
+    delta = corpus_delta(db, tc.seq_len + 1, cfg.vocab,
+                         insert=64, retire=range(8), seed=tc.seed + 1)
+    return ((delta_step, delta),)
+
+
+def run_integration(steps: int, kill_at: int, delta_step: int,
+                    batch: int, seq_len: int, workdir: Path) -> None:
+    base = TrainConfig(arch="smollm_135m", steps=steps, batch=batch,
+                       seq_len=seq_len, data="poisson_join",
+                       ckpt_every=kill_at, log_every=1000)
+    deltas = _delta_schedule(base, delta_step)
+
+    print(f"[integration] run A: {steps} steps, delta at {delta_step}")
+    a = train(dataclasses.replace(base, deltas=deltas,
+                                  ckpt_dir=str(workdir / "a")))
+
+    print(f"[integration] run B: kill after step {kill_at}, then resume")
+    train(dataclasses.replace(base, deltas=deltas, steps=kill_at,
+                              ckpt_dir=str(workdir / "b")))
+    b = train(dataclasses.replace(base, deltas=deltas,
+                                  ckpt_dir=str(workdir / "b")))
+
+    # -- the contract ------------------------------------------------------
+    assert a["data_versions"] == [0] * delta_step + [1] * (steps - delta_step), \
+        f"version trace must flip exactly at the barrier: {a['data_versions']}"
+    assert b["data_versions"] == a["data_versions"][kill_at:], \
+        "resumed run must replay the same version trace"
+    tail = a["losses"][kill_at:]
+    if not np.array_equal(np.asarray(tail), np.asarray(b["losses"])):
+        raise AssertionError(
+            f"resumed losses are not bit-identical: {tail} vs {b['losses']}")
+    for i, (da, db_) in enumerate(zip(a["doc_ids"][kill_at:], b["doc_ids"])):
+        if not np.array_equal(da, db_):
+            raise AssertionError(
+                f"sampled doc ids diverge at resumed step {kill_at + i}")
+    print(f"[integration] OK: {steps - kill_at} resumed steps bit-identical "
+          f"(losses + doc ids), version barrier at step {delta_step}")
+    print(f"loss: {a['losses'][0]:.4f} -> {a['losses'][-1]:.4f}")
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=300)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--kill-at", type=int, default=12)
+    ap.add_argument("--delta-step", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--train-only", action="store_true",
+                    help="plain training run, no kill/resume verification")
     ap.add_argument("--full", action="store_true",
                     help="train the full smollm-135m (sized for TPU; slow on CPU)")
-    ap.add_argument("--ckpt-dir", default="/tmp/repro_joinsampled_ckpt")
+    ap.add_argument("--ckpt-dir", default="")
     args = ap.parse_args()
+
+    if not args.train_only:
+        workdir = Path(args.ckpt_dir or tempfile.mkdtemp(prefix="joinsampled_"))
+        run_integration(args.steps, args.kill_at, args.delta_step,
+                        args.batch, args.seq_len, workdir)
+        return
 
     tc = TrainConfig(
         arch="smollm_135m",
@@ -32,7 +114,7 @@ def main():
         batch=args.batch,
         seq_len=args.seq_len,
         data="poisson_join",
-        ckpt_dir=args.ckpt_dir,
+        ckpt_dir=args.ckpt_dir or "/tmp/repro_joinsampled_ckpt",
         ckpt_every=100,
     )
     out = train(tc)

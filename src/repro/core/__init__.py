@@ -14,7 +14,8 @@ Engine entry points: ``repro.engine.QueryEngine`` is the unified planner /
 compiled-plan cache over these primitives — ``engine.full_join(q)`` and
 ``engine.poisson_sample(q, key)`` serve both workloads from one cached
 shred index (DESIGN.md §7). ``PoissonSampler`` and ``yannakakis.full_join``
-remain as single-query facades over it.
+are DEPRECATED single-query facades over it (DeprecationWarning since the
+DrawSpec consolidation, DESIGN.md §13); new code holds a ``QueryEngine``.
 
 x64 note: join sizes reach 1e10 (paper §1), so offsets/prefix vectors are
 int64. JAX only honors int64 with the x64 flag; importing repro.core enables

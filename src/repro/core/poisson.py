@@ -17,6 +17,7 @@ compiled-plan and shred caches across queries.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Dict, Optional
 
 import jax
@@ -78,8 +79,12 @@ class JoinSample:
 class PoissonSampler:
     """Index-and-Probe executor for ``Q = beta_y(R1 |><| ... |><| Rl)``.
 
-    Facade over ``repro.engine.QueryEngine`` (one engine, one compiled
-    plan); kept for API stability and the single-query use case.
+    .. deprecated::
+        Thin facade over ``repro.engine.QueryEngine`` (one engine, one
+        compiled plan), kept so published call sites keep running.
+        Construct a ``QueryEngine`` instead — it caches plans across
+        queries, batches draws (``sample_batch``), shards over meshes, and
+        consumes deltas, none of which this facade exposes (DESIGN.md §13).
     """
 
     def __init__(
@@ -101,6 +106,11 @@ class PoissonSampler:
         # is part of repro.core's own import sequence.
         from repro.engine import QueryEngine
 
+        warnings.warn(
+            "core.PoissonSampler is deprecated; use repro.engine.QueryEngine"
+            " (engine.sample / engine.sample_batch) — it shares plan caches"
+            " across queries and supports batching, sharding, and deltas",
+            DeprecationWarning, stacklevel=2)
         if query.prob_var is None:
             raise ValueError("Poisson sampling needs query.prob_var (beta_y)")
         if project is not None and query.prob_var not in project:

@@ -11,6 +11,7 @@ Baselines (paper §6 "Baseline"):
 """
 from __future__ import annotations
 
+import warnings
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -43,11 +44,18 @@ def flatten(shred: Shred, rep: Optional[str] = None) -> Dict[str, jnp.ndarray]:
 def full_join(db: Database, query: JoinQuery, rep: str = "usr") -> Dict[str, jnp.ndarray]:
     """Yannakakis via shredded semijoins + flatten (SYA; Prop 4.4/4.5).
 
-    Facade over ``repro.engine.QueryEngine.full_join`` (one throwaway
-    engine). Callers issuing repeated queries should hold a ``QueryEngine``
-    so the shred index is cached across calls (DESIGN.md §7)."""
+    .. deprecated::
+        Facade over ``repro.engine.QueryEngine.full_join`` (one throwaway
+        engine — the shred index is rebuilt every call). Hold a
+        ``QueryEngine`` instead so the index is cached across calls
+        (DESIGN.md §7, §13)."""
     from repro.engine import QueryEngine  # lazy: engine imports repro.core
 
+    warnings.warn(
+        "core.yannakakis.full_join is deprecated; use "
+        "repro.engine.QueryEngine.full_join — it caches the shred index "
+        "across calls instead of rebuilding it per query",
+        DeprecationWarning, stacklevel=2)
     return QueryEngine(db, rep=rep).full_join(query)
 
 

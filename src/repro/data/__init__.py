@@ -1,3 +1,11 @@
 """Data pipeline: deterministic, resumable, with the paper's Poisson-join
-sampler as a first-class batch source."""
-from .pipeline import PoissonJoinSource, SyntheticLMSource, make_corpus_db  # noqa: F401
+sampler as a first-class, engine-native batch source (DESIGN.md §13)."""
+from .pipeline import (  # noqa: F401
+    PoissonJoinSource, Prefetcher, SyntheticLMSource, corpus_delta,
+    make_corpus_db,
+)
+
+__all__ = [
+    "PoissonJoinSource", "Prefetcher", "SyntheticLMSource", "corpus_delta",
+    "make_corpus_db",
+]

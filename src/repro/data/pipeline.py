@@ -1,7 +1,7 @@
 """Training-data pipeline built on Poisson sampling over acyclic joins.
 
 This is where the paper becomes a *training-framework feature* (DESIGN.md
-§2): the corpus is a relational database — e.g.
+§2, §13): the corpus is a relational database — e.g.
 
     Doc(doc, clust)                 one row per document
     ClusterQuality(clust, p)        data-curation probability per cluster
@@ -12,21 +12,43 @@ and each training step draws an independent Poisson sample of the join
 engine), without materializing the joined corpus. The shredded index is
 built once; a step costs O(k log |db|).
 
-Determinism/resume: batch(step) depends only on (seed, step), so restarts
-resume mid-epoch exactly (checkpoint stores just the step counter), and
-elastic re-sharding cannot skew the sampling distribution.
+The source is engine-native (DESIGN.md §13): draws go through
+``QueryEngine.sample_batch`` — a *window* of W consecutive steps is one
+jitted dispatch filling a device-resident ring of ``(W, cap)`` buffers, and
+token rows are gathered on device, so the steady path performs no host
+round-trip per step. The corpus is *live*: ``DeltaBatch`` events scheduled
+at step barriers advance the engine via ``apply_delta`` (warm caches
+upgraded in place, DESIGN.md §11), prefetch windows are clipped at the
+barriers so no window straddles two snapshots, and every batch records the
+``db_version`` it was drawn at.
+
+Determinism/resume: batch(step) depends only on (seed, step, schedule) —
+per-step keys are ``fold_in(key(seed), step)``, window boundaries are a
+pure function of the step and the (static) delta schedule, and lane ``b``
+of a batched draw is bit-identical to the single draw under ``keys[b]`` —
+so restarts resume mid-epoch exactly (checkpoint stores the step counter
+and the data version), and elastic re-sharding cannot skew the sampling
+distribution.
 """
 from __future__ import annotations
 
+import bisect
+import dataclasses
 import queue
 import threading
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Atom, Database, JoinQuery, PoissonSampler
+from repro.core import Atom, Database, DeltaBatch, JoinQuery
+from repro.engine import DrawSpec, QueryEngine
+
+__all__ = [
+    "make_corpus_db", "corpus_delta", "PoissonJoinSource",
+    "SyntheticLMSource", "Prefetcher",
+]
 
 
 def make_corpus_db(
@@ -54,45 +76,246 @@ def make_corpus_db(
     })
 
 
-class PoissonJoinSource:
-    """Batches of token sequences selected by Poisson sampling over a join.
+def corpus_delta(db: Database, seq_len: int, vocab: int, *,
+                 insert: int = 0, retire: Sequence[int] = (),
+                 seed: int = 0) -> DeltaBatch:
+    """A live-corpus change set against ``db``: ``insert`` fresh documents
+    and/or ``retire`` existing ``Doc`` rows (row indices into the current
+    snapshot).
 
-    Each step: sample doc ids via Index-and-Probe, take the first
-    ``batch`` valid ids (wrapping deterministically if the sample is small),
-    gather their token rows.
+    The doc-id = token-row invariant is preserved the cheap way: retiring a
+    document deletes its ``Doc`` row only (its token row is orphaned, never
+    re-indexed — surviving doc ids stay valid), while inserts append to
+    both ``Doc`` and ``_tokens`` with ids continuing the token-row count.
+    """
+    if not insert and not len(retire):
+        raise ValueError("corpus_delta: nothing to insert or retire")
+    rng = np.random.default_rng(seed)
+    n_tok_rows = db.relations["_tokens"].column("flat").shape[0] // seq_len
+    n_clusters = db.relations["ClusterQuality"].num_rows
+    per_rel: Dict[str, dict] = {}
+    doc_spec: Dict[str, object] = {}
+    if len(retire):
+        doc_spec["delete"] = np.asarray(retire, np.int64)
+    if insert:
+        doc_spec["insert"] = {
+            "doc": n_tok_rows + np.arange(insert),
+            "clust": rng.integers(0, n_clusters, insert),
+        }
+        per_rel["_tokens"] = {
+            "insert": {"flat": rng.integers(0, vocab, insert * seq_len)},
+        }
+    per_rel["Doc"] = doc_spec
+    return DeltaBatch.of(**per_rel)
+
+
+@dataclasses.dataclass
+class _Window:
+    """One prefetched dispatch: W consecutive steps of one snapshot, resident
+    on device. ``lanes[step - start]`` serves ``batch_at(step)``: the gather
+    jit unstacks per-lane outputs (tokens, targets, doc_ids, count), so a
+    served step is a python tuple lookup — no per-step device dispatch."""
+
+    start: int
+    end: int
+    version: int
+    lanes: Tuple            # W x (tokens, targets, doc_ids, count)
+    wrapped: jnp.ndarray    # (W,) bool: draw undershot the batch size
+
+
+class PoissonJoinSource:
+    """Batches of token sequences selected by Poisson sampling over a join,
+    drawn through ``QueryEngine.sample_batch`` (DESIGN.md §13).
+
+    Each step: take lane ``step - start`` of the step's prefetch window —
+    one batched engine dispatch per ``window`` steps — wrap the sampled doc
+    ids deterministically if the draw undershot ``batch`` (counted in
+    ``wrapped``, never silent), and gather token rows on device.
+
+    ``deltas`` is a step-aligned schedule of ``(step, DeltaBatch)`` events:
+    the batch at ``step`` (and every later one) is drawn at the post-delta
+    snapshot, applied via ``engine.apply_delta`` so warm caches upgrade in
+    place. Windows are clipped at the barriers — no window straddles two
+    versions — and every batch carries the ``db_version`` it was drawn at.
+    Steps must be consumed in non-decreasing version order (the engine
+    moves forward); a fresh source replays the schedule from the base
+    snapshot, which is what makes kill/resume bit-exact.
     """
 
-    def __init__(self, db: Database, seq_len: int, batch: int, seed: int = 0,
-                 query: Optional[JoinQuery] = None, doc_var: str = "doc"):
+    def __init__(self, db: Optional[Database], seq_len: int, batch: int,
+                 seed: int = 0, query: Optional[JoinQuery] = None,
+                 doc_var: str = "doc", engine: Optional[QueryEngine] = None,
+                 window: int = 8, depth: int = 2,
+                 deltas: Sequence[Tuple[int, DeltaBatch]] = (),
+                 spec: Optional[DrawSpec] = None):
+        if engine is None:
+            if db is None:
+                raise ValueError("pass a Database or a QueryEngine")
+            engine = QueryEngine(db)
+        self.engine = engine
         self.query = query or JoinQuery(
             (Atom.of("ClusterQuality", "clust", "p"),
              Atom.of("Doc", "doc", "clust")),
             prob_var="p")
-        self.sampler = PoissonSampler(db, self.query)
-        n_docs = db.relations["Doc"].num_rows
-        self.tokens = db.relations["_tokens"].column("flat").reshape(n_docs, seq_len)
         self.seq_len = seq_len
         self.batch = batch
         self.doc_var = doc_var
         self.seed = seed
         self.key = jax.random.key(seed)
-        cap = self.sampler.default_capacity()
+        # jitted once: a bare vmap would retrace the fold_in every window
+        # (~1ms of host work per dispatch on CPU)
+        self._fold_keys = jax.jit(
+            jax.vmap(lambda s: jax.random.fold_in(self.key, s)))
+        self.window = int(window)
+        if self.window < 1:
+            raise ValueError("window must be >= 1")
+        self._depth = max(int(depth), 1)
+        self._ring: Dict[int, _Window] = {}
+
+        # Delta schedule: sorted events; version_at(step) = base + #{e <= step}.
+        self._events: List[Tuple[int, DeltaBatch]] = sorted(
+            ((int(s), d) for s, d in deltas), key=lambda e: e[0])
+        self._event_steps = [s for s, _ in self._events]
+        self._applied = 0
+        self.base_version = self.engine.db.version
+
+        # Capacity is resolved ONCE at construction and frozen into the spec:
+        # cap is a traced static shape, so a resumed source re-deriving it
+        # from a later snapshot would silently change batch contents. The
+        # 128-row rounding keeps the gather lane-aligned; a draw that still
+        # undershoots ``batch`` wraps deterministically and increments
+        # ``wrapped`` (DESIGN.md §13) rather than wrapping silently.
+        plan = self.engine.compile(self.query, spec)
+        base = spec or DrawSpec()
+        cap = base.cap or plan.default_capacity()
         self.cap = max(cap, ((batch + 127) // 128) * 128)
+        self._spec = base.with_overrides(cap=self.cap)
+        self._bind_tokens()
+
+        # Telemetry without steady-path syncs: overflow accumulates on
+        # device once per window; wrap flags are recorded per served lane
+        # as (device array, lane) refs — zero dispatches per step — and
+        # drained when the ``wrapped`` property is read.
+        self._wrapped_host = 0
+        self._served_wrapped: List[Tuple[jnp.ndarray, int]] = []
+        self._overflow_dev = jnp.zeros((), jnp.int32)
+
+        def _gather(tokens, docs, counts):
+            # docs: (W, cap), counts: (W,) -> per-lane wrap + token gather.
+            cnt = jnp.clip(counts, 1, docs.shape[1])[:, None]
+            idx = jnp.arange(batch)[None, :] % cnt            # (W, batch)
+            chosen = jnp.take_along_axis(docs, idx, axis=1)   # (W, batch)
+            toks = jnp.take(tokens, chosen, axis=0).astype(jnp.int32)
+            wrapped = counts < batch
+            # Unstack inside the jit: 4W output leaves, ONE dispatch —
+            # batch_at never pays a per-step slice dispatch.
+            lanes = tuple(
+                (toks[i, :, :-1], toks[i, :, 1:], chosen[i], counts[i])
+                for i in range(counts.shape[0]))
+            return lanes, wrapped
+        self._gather = jax.jit(_gather)
+
+    # -- live-corpus schedule ------------------------------------------------
+    def _bind_tokens(self) -> None:
+        n_rows = self.engine.db.relations["_tokens"].column("flat").shape[0]
+        if n_rows % self.seq_len:
+            raise ValueError("_tokens length is not a multiple of seq_len")
+        self.tokens = self.engine.db.relations["_tokens"].column(
+            "flat").reshape(-1, self.seq_len)
+
+    def version_at(self, step: int) -> int:
+        """The snapshot version the batch at ``step`` is drawn at — a pure
+        function of the schedule (the resume contract's second half)."""
+        return self.base_version + bisect.bisect_right(self._event_steps, step)
+
+    def _advance_to(self, step: int) -> None:
+        """Apply every scheduled delta with event step <= ``step``."""
+        want = bisect.bisect_right(self._event_steps, step)
+        if want < self._applied:
+            raise ValueError(
+                f"source already advanced past step {step} (version "
+                f"{self.base_version + self._applied} > "
+                f"{self.version_at(step)}); build a fresh source to rewind")
+        while self._applied < want:
+            _, delta = self._events[self._applied]
+            self.engine.apply_delta(delta)
+            self._applied += 1
+            self._bind_tokens()
+
+    def _window_bounds(self, step: int) -> Tuple[int, int]:
+        """The prefetch window containing ``step``: the aligned ``window``
+        grid, clipped at delta barriers so one window = one snapshot."""
+        s0 = (step // self.window) * self.window
+        end = s0 + self.window
+        i = bisect.bisect_right(self._event_steps, step)
+        if i > 0:
+            s0 = max(s0, self._event_steps[i - 1])
+        if i < len(self._event_steps):
+            end = min(end, self._event_steps[i])
+        return s0, end
+
+    # -- draw path -----------------------------------------------------------
+    def _dispatch(self, s0: int, end: int) -> _Window:
+        self._advance_to(s0)
+        keys = self._fold_keys(jnp.arange(s0, end))
+        smp = self.engine.sample_batch(self.query, keys, self._spec)
+        lanes, wrapped = self._gather(
+            self.tokens, smp.columns[self.doc_var], smp.count)
+        self._overflow_dev = self._overflow_dev + jnp.sum(
+            smp.overflow.astype(jnp.int32))
+        win = _Window(s0, end, self.engine.db.version, lanes, wrapped)
+        self._ring[s0] = win
+        return win
+
+    def _window_for(self, step: int) -> _Window:
+        s0, end = self._window_bounds(step)
+        for k in [k for k, w in self._ring.items() if w.end <= step]:
+            del self._ring[k]
+        win = self._ring.get(s0)
+        if win is None:
+            win = self._dispatch(s0, end)
+        # Eagerly dispatch the next window: JAX's async dispatch makes this
+        # the ring's second slot — the device fills it while the host trains
+        # on the current one, with no prefetch thread required.
+        if self._depth > 1 and len(self._ring) < self._depth:
+            n0, nend = self._window_bounds(end)
+            if n0 not in self._ring:
+                self._dispatch(n0, nend)
+        return win
 
     def batch_at(self, step: int) -> Dict[str, jnp.ndarray]:
-        """Deterministic in (seed, step) — the resume/elasticity contract."""
-        key = jax.random.fold_in(self.key, step)
-        sample = self.sampler.sample(key, cap=self.cap)
-        docs = sample.columns[self.doc_var]
-        count = jnp.maximum(sample.count, 1)
-        idx = jnp.arange(self.batch) % count          # wrap if sample < batch
-        chosen = jnp.take(docs, idx)
-        toks = jnp.take(self.tokens, chosen, axis=0).astype(jnp.int32)
+        """Deterministic in (seed, step, schedule) — the resume/elasticity
+        contract. ``db_version`` is a host int (checkpoint metadata);
+        everything else stays on device, and the steady path issues no
+        per-step device dispatch at all (lanes were unstacked at window
+        dispatch)."""
+        win = self._window_for(step)
+        toks, targets, docs, count = win.lanes[step - win.start]
+        self._served_wrapped.append((win.wrapped, step - win.start))
         return {
-            "tokens": toks[:, :-1],
-            "targets": toks[:, 1:],
-            "sampled_k": sample.count,
+            "tokens": toks,
+            "targets": targets,
+            "sampled_k": count,
+            "doc_ids": docs,
+            "db_version": win.version,
         }
+
+    # -- telemetry -----------------------------------------------------------
+    @property
+    def wrapped(self) -> int:
+        """Served batches whose draw undershot ``batch`` (doc ids repeated
+        by deterministic wrap). Reading drains the per-lane records (the
+        only device sync on this counter's path)."""
+        if self._served_wrapped:
+            for flags, i in self._served_wrapped:
+                self._wrapped_host += int(np.asarray(flags)[i])
+            self._served_wrapped.clear()
+        return self._wrapped_host
+
+    @property
+    def overflows(self) -> int:
+        """Draw lanes that overflowed ``cap`` across all dispatches."""
+        return int(self._overflow_dev)
 
     def __iter__(self) -> Iterator[Dict[str, jnp.ndarray]]:
         step = 0

@@ -19,6 +19,14 @@ batched multi-draw execution is the same API over a key vector
     bat  = engine.sample_batch(query, jax.random.split(key, 64))
     bat  = engine.sample_batch(query, keys, mesh=mesh)  # shard_map ∘ vmap
 
+Draw configuration is one frozen value object (DESIGN.md §13): every entry
+point accepts ``spec=DrawSpec(...)`` consolidating rep/method/project/cap/
+acap/narrow/mesh/axes; the legacy kwargs keep working and win
+field-by-field over the spec:
+
+    spec = DrawSpec(method="exprace", cap=4096, mesh=mesh)
+    bat  = engine.sample_batch(query, keys, spec)
+
 The bound database is a versioned snapshot (DESIGN.md §11):
 ``engine.apply_delta(delta)`` advances it while upgrading warm cache
 entries in place (incremental reshred, plans keep their traces);
@@ -26,12 +34,13 @@ entries in place (incremental reshred, plans keep their traces);
 
 Public API:
     QueryEngine       plan/cache/dispatch over one database
+    DrawSpec          frozen, hashable draw configuration (one value object)
     CompiledPlan      a cached plan: shred index + jitted executors
     ShardedPlan       a cached sharded plan: stacked index + shard_map jit
     plan_shards       the shard planner (mesh x root size x policy)
     CapacityPolicy    explicit static-shape capacity & overflow policy
     CacheStats        observable shred/plan cache counters
-    fingerprint.*     structure-only cache keys (incl. mesh shape)
+    fingerprint.*     structure-only cache keys (incl. mesh + spec shape)
 
 The legacy entry points (``core.PoissonSampler``, ``core.yannakakis
 .full_join``, ``core.distributed.ShardedPoissonSampler``) are thin facades
@@ -40,12 +49,18 @@ repeated queries share its caches.
 """
 from .capacity import CapacityPolicy, DEFAULT_POLICY
 from .engine import CacheStats, QueryEngine
-from .fingerprint import mesh_fingerprint, query_fingerprint, schema_fingerprint
+from .fingerprint import (
+    draw_fingerprint, mesh_fingerprint, query_fingerprint,
+    schema_fingerprint,
+)
 from .plan import CompiledPlan
 from .sharding import ShardedPlan, ShardPlan, plan_shards
+from .spec import DrawSpec, merge_spec
 
 __all__ = [
-    "QueryEngine", "CompiledPlan", "ShardedPlan", "ShardPlan", "plan_shards",
+    "QueryEngine", "DrawSpec", "merge_spec",
+    "CompiledPlan", "ShardedPlan", "ShardPlan", "plan_shards",
     "CapacityPolicy", "DEFAULT_POLICY", "CacheStats",
     "query_fingerprint", "schema_fingerprint", "mesh_fingerprint",
+    "draw_fingerprint",
 ]

@@ -51,6 +51,7 @@ from .fingerprint import (
 )
 from .plan import CompiledPlan
 from .sharding import ShardedPlan, plan_shards
+from .spec import DrawSpec, merge_spec
 
 __all__ = ["QueryEngine", "CacheStats"]
 
@@ -179,22 +180,36 @@ class QueryEngine:
             self._shreds.popitem(last=False)
         return stacked
 
-    def compile(self, query: JoinQuery, *, rep: Optional[str] = None,
-                method: str = "exprace",
-                project: Optional[tuple] = None) -> CompiledPlan:
+    @staticmethod
+    def _resolve_spec(spec: Optional[DrawSpec], **kw) -> DrawSpec:
+        """The single normalization shim behind every entry point
+        (DESIGN.md §13): start from ``spec`` (or an empty ``DrawSpec``)
+        and overlay each legacy kwarg that was explicitly passed. Kwargs
+        win over spec fields; ``None`` means "not passed"."""
+        return merge_spec(spec, **kw)
+
+    def compile(self, query: JoinQuery, spec: Optional[DrawSpec] = None, *,
+                rep: Optional[str] = None,
+                method: Optional[str] = None,
+                project: Optional[tuple] = None,
+                narrow: Optional[bool] = None) -> CompiledPlan:
         """Plan + index + jit for a query; cached by fingerprint.
 
-        ``project``: bag-based projection attributes A for queries of the
-        paper's form beta_y(pi_A(Q^)) (eq. 2). Sampling first and projecting
-        the sample is exact for bag projection; set-based free-connex
-        projection is out of scope (DESIGN.md §9).
+        ``spec`` (or the equivalent legacy kwargs — see ``DrawSpec``):
+        ``project`` is the bag-based projection attributes A for queries of
+        the paper's form beta_y(pi_A(Q^)) (eq. 2). Sampling first and
+        projecting the sample is exact for bag projection; set-based
+        free-connex projection is out of scope (DESIGN.md §9).
         """
-        rep = rep or self.rep
-        project = tuple(project) if project else None
-        if project is not None and query.prob_var is not None \
-                and query.prob_var not in project:
+        spec = self._resolve_spec(
+            spec, rep=rep, method=method,
+            project=tuple(project) if project else None, narrow=narrow)
+        crep = spec.rep or self.rep
+        if spec.project is not None and query.prob_var is not None \
+                and query.prob_var not in spec.project:
             raise ValueError("prob_var (y) must be in the projection A")
-        key = executor_key(query, rep, method, project, self.db.version)
+        key = executor_key(query, crep, spec.method, spec.project,
+                           self.db.version, spec.narrow)
         hit = self._plans.get(key)
         if hit is not None:
             self._plans.move_to_end(key)
@@ -202,19 +217,21 @@ class QueryEngine:
             return hit
         self.stats.plan_misses += 1
         plan = CompiledPlan(
-            query=query, rep=rep, method=method, project=project,
-            shred=self._shred_for(query, rep), policy=self.policy,
+            query=query, spec=spec.plan_view(crep),
+            shred=self._shred_for(query, crep), policy=self.policy,
         )
         self._plans[key] = plan
         while len(self._plans) > self.max_plans:
             self._plans.popitem(last=False)
         return plan
 
-    def compile_sharded(self, query: JoinQuery, mesh, *,
+    def compile_sharded(self, query: JoinQuery, mesh,
+                        spec: Optional[DrawSpec] = None, *,
                         axes: Optional[tuple] = None,
                         rep: Optional[str] = None,
-                        method: str = "exprace",
+                        method: Optional[str] = None,
                         project: Optional[tuple] = None,
+                        narrow: Optional[bool] = None,
                         ) -> Union[CompiledPlan, ShardedPlan]:
         """Plan + stacked index + shard_map jit for a query over ``mesh``.
 
@@ -224,25 +241,28 @@ class QueryEngine:
         transparently fall back to the single-device ``CompiledPlan`` — a
         1-device mesh costs nothing over not passing one (DESIGN.md §8).
         """
-        rep = rep or self.rep
+        spec = self._resolve_spec(
+            spec, rep=rep, method=method,
+            project=tuple(project) if project else None, narrow=narrow,
+            axes=tuple(axes) if axes is not None else None)
+        crep = spec.rep or self.rep
         fp = query_fingerprint(query)
-        vkey = (fp, mesh_fingerprint(mesh),
-                tuple(axes) if axes is not None else None)
+        vkey = (fp, mesh_fingerprint(mesh), spec.axes)
         hit = self._shard_verdicts.get(vkey)
         if hit is None:  # GYO + planner only on the first sighting
             root_atom = build_plan(query).atom
             root_rows = self.db.relations[root_atom.relation].num_rows
-            sp = plan_shards(mesh, root_rows, self.policy, axes=axes)
+            sp = plan_shards(mesh, root_rows, self.policy, axes=spec.axes)
             self._shard_verdicts[vkey] = (sp, root_atom.relation)
             while len(self._shard_verdicts) > self.max_plans:
                 self._shard_verdicts.popitem(last=False)
         else:
             sp, _root = hit
         if not sp.axes:
-            return self.compile(query, rep=rep, method=method, project=project)
-        project = tuple(project) if project else None
-        key = sharded_executor_key(query, rep, method, project, mesh, sp.axes,
-                                   self.db.version)
+            return self.compile(query, spec)
+        key = sharded_executor_key(query, crep, spec.method, spec.project,
+                                   mesh, sp.axes, self.db.version,
+                                   spec.narrow)
         hit = self._plans.get(key)
         if hit is not None:
             self._plans.move_to_end(key)
@@ -250,9 +270,9 @@ class QueryEngine:
             return hit
         self.stats.plan_misses += 1
         plan = ShardedPlan(
-            query=query, rep=rep, method=method, project=project,
+            query=query, spec=spec.plan_view(crep),
             mesh=mesh, axes=sp.axes,
-            stacked=self._stacked_shred_for(query, rep, mesh, sp.num_shards),
+            stacked=self._stacked_shred_for(query, crep, mesh, sp.num_shards),
             policy=self.policy,
         )
         self._plans[key] = plan
@@ -353,97 +373,122 @@ class QueryEngine:
         return self
 
     # -- entry points --------------------------------------------------------
-    def full_join(self, query: JoinQuery, *, rep: Optional[str] = None,
+    def full_join(self, query: JoinQuery, spec: Optional[DrawSpec] = None, *,
+                  rep: Optional[str] = None,
                   mesh=None, axes: Optional[tuple] = None,
                   ) -> Dict[str, jnp.ndarray]:
         """Yannakakis full join via the cached index (SYA; Prop 4.4/4.5).
 
-        With ``mesh=``, the root is block-partitioned over the mesh's data
-        axes and each shard flattens its block through the stacked index;
-        the gathered result is bit-identical to the single-device path,
-        order included (DESIGN.md §8)."""
-        if mesh is not None:
-            plan = self.compile_sharded(query, mesh, axes=axes, rep=rep)
+        With a mesh (``spec.mesh`` or ``mesh=``), the root is
+        block-partitioned over the mesh's data axes and each shard flattens
+        its block through the stacked index; the gathered result is
+        bit-identical to the single-device path, order included
+        (DESIGN.md §8)."""
+        spec = self._resolve_spec(spec, rep=rep, mesh=mesh,
+                                  axes=tuple(axes) if axes is not None
+                                  else None)
+        if spec.mesh is not None:
+            plan = self.compile_sharded(query, spec.mesh, spec)
             if isinstance(plan, ShardedPlan):
                 return plan.full_join()
         else:
-            plan = self.compile(query, rep=rep)
-        return plan.full_join(rep=rep)
+            plan = self.compile(query, spec)
+        return plan.full_join(rep=spec.rep)
 
-    def poisson_sample(self, query: JoinQuery, key, *,
+    def poisson_sample(self, query: JoinQuery, key,
+                       spec: Optional[DrawSpec] = None, *,
                        cap: Optional[int] = None, acap: Optional[int] = None,
-                       rep: Optional[str] = None, method: str = "exprace",
+                       rep: Optional[str] = None,
+                       method: Optional[str] = None,
                        project: Optional[tuple] = None,
+                       narrow: Optional[bool] = None,
                        auto: bool = False, mesh=None,
                        axes: Optional[tuple] = None) -> JoinSample:
         """One independent Poisson sample of ``beta_y(Q)`` via the cached
         index. ``auto=True`` applies the policy's redraw-on-overflow loop.
+        ``spec=`` carries the full draw configuration (``DrawSpec``); the
+        legacy kwargs keep working and win field-by-field over the spec.
 
-        With ``mesh=``, per-shard trials run under device-folded keys and
+        With a mesh, per-shard trials run under device-folded keys and
         one psum reports the global count — distributionally identical to
         the global draw, and bit-reproducible against a host loop folding
         the shard index into the same base key (DESIGN.md §8). Degenerate
         meshes fall back to the single-device plan transparently."""
+        spec = self._resolve_spec(
+            spec, cap=cap, acap=acap, rep=rep, method=method,
+            project=tuple(project) if project else None, narrow=narrow,
+            mesh=mesh, axes=tuple(axes) if axes is not None else None)
         if query.prob_var is None:
             raise ValueError("Poisson sampling needs query.prob_var (beta_y)")
-        if mesh is not None:
-            plan = self.compile_sharded(query, mesh, axes=axes, rep=rep,
-                                        method=method, project=project)
+        if spec.mesh is not None:
+            plan = self.compile_sharded(query, spec.mesh, spec)
             if isinstance(plan, ShardedPlan):
                 if auto:
-                    return plan.sample_auto(key, cap=cap, acap=acap)
-                return plan.sample(key, cap=cap, acap=acap)
+                    return plan.sample_auto(key, cap=spec.cap, acap=spec.acap)
+                return plan.sample(key, cap=spec.cap, acap=spec.acap)
             # degenerate mesh: compile_sharded already fell back to the
             # single-device CompiledPlan — reuse it, don't compile twice
         else:
-            plan = self.compile(query, rep=rep, method=method, project=project)
+            plan = self.compile(query, spec)
         if auto:
-            return plan.sample_auto(key, cap=cap, acap=acap)
-        return plan.sample(key, cap=cap, acap=acap,
-                           rep=rep if rep != "both" else None)
+            return plan.sample_auto(key, cap=spec.cap, acap=spec.acap)
+        return plan.sample(key, cap=spec.cap, acap=spec.acap,
+                           rep=spec.rep if spec.rep != "both" else None)
 
     # ``sample`` is the preferred name for the Poisson entry point; kwargs
-    # (including ``mesh=``) are identical.
+    # (including ``spec=`` and ``mesh=``) are identical.
     sample = poisson_sample
 
-    def sample_batch(self, query: JoinQuery, keys, *,
+    def sample_batch(self, query: JoinQuery, keys,
+                     spec: Optional[DrawSpec] = None, *,
                      cap: Optional[int] = None, acap: Optional[int] = None,
-                     rep: Optional[str] = None, method: str = "exprace",
-                     project: Optional[tuple] = None, mesh=None,
+                     rep: Optional[str] = None,
+                     method: Optional[str] = None,
+                     project: Optional[tuple] = None,
+                     narrow: Optional[bool] = None, mesh=None,
                      axes: Optional[tuple] = None) -> JoinSample:
         """``B`` independent Poisson draws of ``beta_y(Q)`` in one dispatch
         (DESIGN.md §10). ``keys`` is a ``(B,)`` PRNG key vector — pass
         ``jax.random.split(key, B)`` for the canonical stream. The result's
         leaves carry a leading batch axis (columns/positions ``(B, cap)``,
         count/overflow ``(B,)``) and lane ``b`` is bit-identical to
-        ``sample(query, keys[b])`` with the same kwargs.
+        ``sample(query, keys[b])`` with the same spec/kwargs.
 
         The plan is the *same* cache entry the single-draw path uses (one
         fingerprint, one shred, one ``CompiledPlan``), so interleaving
         single and batched draws rebuilds nothing; batch sizes are bucketed
         to powers of two, so warm same-bucket batches never retrace. With
-        ``mesh=``, the sharded plan composes: shard_map outside, vmap
+        a mesh, the sharded plan composes: shard_map outside, vmap
         inside, one psum for the ``(B,)`` global counts.
         """
+        spec = self._resolve_spec(
+            spec, cap=cap, acap=acap, rep=rep, method=method,
+            project=tuple(project) if project else None, narrow=narrow,
+            mesh=mesh, axes=tuple(axes) if axes is not None else None)
         if query.prob_var is None:
             raise ValueError("Poisson sampling needs query.prob_var (beta_y)")
-        if mesh is not None:
-            plan = self.compile_sharded(query, mesh, axes=axes, rep=rep,
-                                        method=method, project=project)
+        if spec.mesh is not None:
+            plan = self.compile_sharded(query, spec.mesh, spec)
             if isinstance(plan, ShardedPlan):
-                return plan.sample_batch(keys, cap=cap, acap=acap)
+                return plan.sample_batch(keys, cap=spec.cap, acap=spec.acap)
             # degenerate mesh: fall through to the single-device plan
         else:
-            plan = self.compile(query, rep=rep, method=method, project=project)
-        return plan.sample_batch(keys, cap=cap, acap=acap,
-                                 rep=rep if rep != "both" else None)
+            plan = self.compile(query, spec)
+        return plan.sample_batch(keys, cap=spec.cap, acap=spec.acap,
+                                 rep=spec.rep if spec.rep != "both" else None)
 
     def uniform_sample(self, query: JoinQuery, key, p: float, *,
+                       spec: Optional[DrawSpec] = None,
                        cap: Optional[int] = None, method: str = "hybrid",
                        rep: Optional[str] = None) -> JoinSample:
-        """beta_p with one fixed probability for every join tuple (§6.1)."""
-        plan = self.compile(query, rep=rep)
-        return plan.uniform_sample(key, p, cap=cap, method=method)
+        """beta_p with one fixed probability for every join tuple (§6.1).
+
+        ``method`` here selects the *position* sampler (hybrid/bern/geo/
+        binom) — it is unrelated to ``DrawSpec.method``, so a ``spec``
+        contributes only ``rep``/``cap``/``narrow`` on this path."""
+        spec = self._resolve_spec(spec, cap=cap, rep=rep)
+        plan = self.compile(query, rep=spec.rep, narrow=spec.narrow)
+        return plan.uniform_sample(key, p, cap=spec.cap, method=method)
 
     def join_size(self, query: JoinQuery) -> int:
         """|Q(db)| in O(1) from the cached index (never materialized)."""

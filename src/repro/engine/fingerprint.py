@@ -30,6 +30,7 @@ from repro.core.jointree import JoinQuery
 __all__ = [
     "query_fingerprint", "schema_fingerprint", "mesh_fingerprint",
     "plan_key", "executor_key", "sharded_plan_key", "sharded_executor_key",
+    "draw_fingerprint",
 ]
 
 
@@ -68,10 +69,15 @@ def plan_key(query: JoinQuery, rep: str, version: int = 0) -> Tuple[str, str, in
 def executor_key(
     query: JoinQuery, rep: str, method: str,
     project: Optional[Tuple[str, ...]], version: int = 0,
-) -> Tuple[str, str, str, Optional[Tuple[str, ...]], int]:
+    narrow: Optional[bool] = None,
+) -> Tuple:
     """Cache key of a compiled plan: the shred key plus everything baked
-    statically into the jitted executor."""
-    return (query_fingerprint(query), rep, method, project, version)
+    statically into the jitted executor. ``narrow`` is the DrawSpec's
+    int32-narrowing override (None = auto) — it changes the traced
+    executors, so it is plan identity like rep/method/project. The bound
+    snapshot version stays the LAST element (``apply_delta`` re-keys
+    entries by slicing it off)."""
+    return (query_fingerprint(query), rep, method, project, narrow, version)
 
 
 def mesh_fingerprint(mesh) -> Tuple[Tuple[str, int], ...]:
@@ -97,9 +103,21 @@ def sharded_plan_key(query: JoinQuery, rep: str, mesh,
 def sharded_executor_key(
     query: JoinQuery, rep: str, method: str,
     project: Optional[Tuple[str, ...]], mesh, axes: Tuple[str, ...],
-    version: int = 0,
+    version: int = 0, narrow: Optional[bool] = None,
 ) -> Tuple:
     """Cache key of a sharded compiled plan: everything static in the
-    shard_map executors, including the partition axes."""
-    return (query_fingerprint(query), rep, method, project,
+    shard_map executors, including the partition axes and the DrawSpec's
+    narrowing override (version last, as in ``executor_key``)."""
+    return (query_fingerprint(query), rep, method, project, narrow,
             mesh_fingerprint(mesh), tuple(axes), version)
+
+
+def draw_fingerprint(spec) -> Tuple:
+    """Structure-only fingerprint of a ``DrawSpec``: hashable, stable, and
+    mesh-identity-free (the mesh contributes its shape via
+    ``mesh_fingerprint``, matching the philosophy of the other keys).
+    Used by callers keying draw configurations across engines."""
+    return (spec.rep, spec.method, spec.project, spec.narrow,
+            spec.cap, spec.acap,
+            mesh_fingerprint(spec.mesh) if spec.mesh is not None else None,
+            spec.axes)

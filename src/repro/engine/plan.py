@@ -23,6 +23,7 @@ from repro.core.yannakakis import flatten
 
 from . import executors
 from .capacity import CapacityPolicy, DEFAULT_POLICY
+from .spec import DrawSpec
 
 __all__ = ["CompiledPlan", "redraw_with_doubling"]
 
@@ -44,7 +45,14 @@ def redraw_with_doubling(draw, cap: int, acap: int, max_doublings: int):
 
 @dataclasses.dataclass
 class CompiledPlan:
-    """One (query fingerprint, rep, method, project) entry of the plan cache.
+    """One (query fingerprint, spec identity) entry of the plan cache.
+
+    ``spec`` is the *resolved* plan-identity ``DrawSpec``: concrete ``rep``
+    (the representation the shred was built with), ``method``, ``project``
+    and the ``narrow`` override — runtime fields (cap/acap) and routing
+    fields (mesh/axes) are stripped by ``DrawSpec.plan_view`` before a plan
+    is constructed. ``rep``/``method``/``project`` remain readable as
+    properties for legacy callers.
 
     w / p / prefE are the root-level weight, probability, and exclusive
     prefix vectors (p is None for queries without ``prob_var`` — such plans
@@ -52,14 +60,24 @@ class CompiledPlan:
     """
 
     query: JoinQuery
-    rep: str                      # representation the shred was built with
-    method: str
-    project: Optional[Tuple[str, ...]]
+    spec: DrawSpec
     shred: Shred
     policy: CapacityPolicy = DEFAULT_POLICY
     # ``rep_default`` (the concrete rep used when a call passes None) and
     # ``_narrow`` are derived per bound shred in ``_bind_shred`` — see
     # probe.select_rep (DESIGN.md §4).
+
+    @property
+    def rep(self) -> str:
+        return self.spec.rep
+
+    @property
+    def method(self) -> str:
+        return self.spec.method
+
+    @property
+    def project(self) -> Optional[Tuple[str, ...]]:
+        return self.spec.project
 
     def __post_init__(self):
         self._default_cap = None
@@ -69,17 +87,34 @@ class CompiledPlan:
         self._batched_jit = executors.batched_sample_executor(
             self.method, self.project)
 
+    def _resolve_narrow(self, shred: Shred, auto_narrow: bool) -> bool:
+        """Apply the spec's narrowing override to the auto verdict.
+        Forcing ``narrow=True`` needs a packed (int32-safe) index — the
+        arena's existence is the exactness proof (DESIGN.md §4)."""
+        if self.spec.narrow is None:
+            return auto_narrow
+        if self.spec.narrow and shred.packed is None:
+            raise ValueError(
+                "DrawSpec(narrow=True) requires a packed int32 index "
+                "(join < 2^31, no empty node); this shred has none")
+        return self.spec.narrow
+
     def _bind_shred(self, shred: Shred) -> None:
         root = shred.root
         self.shred = shred
         self.w = root.weight
         self.prefE = shred.root_prefE
+        # Host-cached once per bind: join_size is read on every draw's
+        # capacity path, and int(device_scalar) is a blocking sync — per
+        # dispatch it would stall the async prefetch ring (DESIGN.md §13).
+        self._join_size = int(shred.join_size)
         # Executor rep + int32-narrowing selection (probe.select_rep,
         # DESIGN.md §4). Recomputed on every (re)bind: an upgraded index
         # may gain or lose its arena (int32 narrowing is per-snapshot).
         # Explicit per-call rep overrides still win in sample()/full_join().
-        self.rep_default, self._narrow = probe.select_rep(
+        self.rep_default, auto_narrow = probe.select_rep(
             shred, "usr" if self.rep == "both" else self.rep)
+        self._narrow = self._resolve_narrow(shred, auto_narrow)
         if self.query.prob_var is not None:
             if self.query.prob_var not in root.variables:
                 raise AssertionError("build_plan must reroot prob_var to the root")
@@ -107,7 +142,7 @@ class CompiledPlan:
     # -- capacity planning ---------------------------------------------------
     @property
     def join_size(self) -> int:
-        return int(self.shred.join_size)
+        return self._join_size
 
     def expected_k(self) -> float:
         return float(estimate.expected_sample_size(self.w, self.p))
@@ -121,9 +156,20 @@ class CompiledPlan:
                 else self.policy.arrival_capacity(self.w, self.p))
 
     # -- execution -----------------------------------------------------------
+    def _call_overrides(self, spec: Optional[DrawSpec], cap, rep, acap):
+        """Merge a per-call ``DrawSpec`` under the explicit kwargs (kwargs
+        win — the same precedence as the engine's normalization shim)."""
+        if spec is not None:
+            cap = cap or spec.cap
+            acap = acap or spec.acap
+            rep = rep or (spec.rep if spec.rep != "both" else None)
+        return cap, rep, acap
+
     def sample(self, key, cap: Optional[int] = None, rep: Optional[str] = None,
-               acap: Optional[int] = None) -> JoinSample:
+               acap: Optional[int] = None,
+               spec: Optional[DrawSpec] = None) -> JoinSample:
         """One independent Poisson sample draw (fresh randomness per key)."""
+        cap, rep, acap = self._call_overrides(spec, cap, rep, acap)
         if self.p is None:
             raise ValueError("plan has no prob_var; use uniform_sample/full_join")
         cap = cap or self.default_capacity()
@@ -137,7 +183,8 @@ class CompiledPlan:
 
     def sample_batch(self, keys, cap: Optional[int] = None,
                      rep: Optional[str] = None,
-                     acap: Optional[int] = None) -> JoinSample:
+                     acap: Optional[int] = None,
+                     spec: Optional[DrawSpec] = None) -> JoinSample:
         """``B`` independent Poisson draws in one dispatch (DESIGN.md §10).
 
         ``keys`` is a ``(B,)`` PRNG key vector (e.g. ``jax.random.split``);
@@ -148,6 +195,7 @@ class CompiledPlan:
         dispatch, so warm batches of any size within a bucket never
         retrace; padding lanes are sliced off the result.
         """
+        cap, rep, acap = self._call_overrides(spec, cap, rep, acap)
         if self.p is None:
             raise ValueError("plan has no prob_var; use uniform_sample/full_join")
         batch = int(keys.shape[0])
@@ -166,9 +214,11 @@ class CompiledPlan:
 
     def sample_auto(self, key, max_doublings: Optional[int] = None,
                     cap: Optional[int] = None,
-                    acap: Optional[int] = None) -> JoinSample:
+                    acap: Optional[int] = None,
+                    spec: Optional[DrawSpec] = None) -> JoinSample:
         """Redraw with doubled capacity until no overflow (host loop).
         ``cap``/``acap`` override the policy-derived starting capacities."""
+        cap, _, acap = self._call_overrides(spec, cap, None, acap)
         if max_doublings is None:
             max_doublings = self.policy.max_doublings
         cap = cap or self.default_capacity()
@@ -189,6 +239,8 @@ class CompiledPlan:
         cols = probe.get(self.shred, pos, rep=self.rep_default)
         return JoinSample(cols, ps.positions, ps.count, ps.overflow)
 
-    def full_join(self, rep: Optional[str] = None) -> Dict[str, jnp.ndarray]:
+    def full_join(self, rep: Optional[str] = None,
+                  spec: Optional[DrawSpec] = None) -> Dict[str, jnp.ndarray]:
         """Yannakakis via the cached index: flatten mu* by bulk probe."""
+        _, rep, _ = self._call_overrides(spec, None, rep, None)
         return flatten(self.shred, rep=rep or self.rep_default)

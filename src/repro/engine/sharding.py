@@ -39,6 +39,7 @@ from repro.core.poisson import JoinSample
 from . import executors
 from .capacity import CapacityPolicy, DEFAULT_POLICY
 from .plan import redraw_with_doubling
+from .spec import DrawSpec
 
 __all__ = ["ShardPlan", "ShardedPlan", "plan_shards", "BATCH_AXES"]
 
@@ -104,20 +105,20 @@ class ShardedPlan:
     ``tests/test_sharded_engine.py``).
     """
 
-    def __init__(self, query: JoinQuery, rep: str, method: str,
-                 project: Optional[Tuple[str, ...]],
+    def __init__(self, query: JoinQuery, spec: DrawSpec,
                  mesh: Mesh, axes: Tuple[str, ...],
                  stacked: StackedShred,
                  policy: CapacityPolicy = DEFAULT_POLICY):
-        if method != "exprace":
+        if spec.method != "exprace":
             # ptbern_flat needs a static per-shard flat count; shard join
             # sizes differ, so only the arrival-race sampler shards.
-            raise ValueError(
-                f"sharded sampling supports method='exprace', got {method!r}")
+            raise ValueError(f"sharded sampling supports method='exprace', "
+                             f"got {spec.method!r}")
         self.query = query
-        self._base_rep = "usr" if rep == "both" else rep
-        self.method = method
-        self.project = tuple(project) if project else None
+        self.spec = spec  # resolved plan-identity spec (DrawSpec.plan_view)
+        self._base_rep = "usr" if spec.rep == "both" else spec.rep
+        self.method = spec.method
+        self.project = spec.project
         self.mesh = mesh
         self.axes = tuple(axes)
         self.policy = policy
@@ -133,8 +134,15 @@ class ShardedPlan:
         # with its leading shard dim; DESIGN.md §4). Both verdicts are
         # baked into the shard_map partials, so a rebind that flips either
         # invalidates the executor caches (a retrace, not a rebuild — same
-        # economics as a capacity change).
+        # economics as a capacity change). The spec's ``narrow`` override
+        # wins over the auto verdict, exactly like the single-device plan.
         rep, narrow = probe.select_rep(stacked.shred, self._base_rep)
+        if self.spec.narrow is not None:
+            if self.spec.narrow and stacked.shred.packed is None:
+                raise ValueError(
+                    "DrawSpec(narrow=True) requires a packed int32 index; "
+                    "this stacked shred has none")
+            narrow = self.spec.narrow
         if (getattr(self, "rep", None), getattr(self, "_narrow", None)) \
                 != (rep, narrow):
             self._samplers.clear()
@@ -290,8 +298,18 @@ class ShardedPlan:
         return self._sampler(cap or self.cap, acap or self.acap)(
             st.shred, st.w, st.p, st.prefE, key)
 
+    def _call_overrides(self, spec: Optional[DrawSpec], cap, acap):
+        """Per-call ``DrawSpec`` under the explicit kwargs (kwargs win).
+        Only the runtime fields apply — rep/narrow are baked into the
+        shard_map executors at bind time."""
+        if spec is not None:
+            cap = cap or spec.cap
+            acap = acap or spec.acap
+        return cap, acap
+
     def sample(self, key, cap: Optional[int] = None,
-               acap: Optional[int] = None) -> JoinSample:
+               acap: Optional[int] = None,
+               spec: Optional[DrawSpec] = None) -> JoinSample:
         """One independent Poisson sample, gathered to a flat JoinSample.
 
         Positions are rebased to *global* flat coordinates (shard base +
@@ -299,6 +317,7 @@ class ShardedPlan:
         plan's samples; ``count`` reflects the gathered tuples (on overflow
         the draw is invalid and flagged, exactly like the unsharded path).
         """
+        cap, acap = self._call_overrides(spec, cap, acap)
         if self.stacked.p is None:
             raise ValueError("plan has no prob_var; use full_join")
         if self.join_size == 0:
@@ -336,7 +355,8 @@ class ShardedPlan:
         )
 
     def sample_batch(self, keys, cap: Optional[int] = None,
-                     acap: Optional[int] = None) -> JoinSample:
+                     acap: Optional[int] = None,
+                     spec: Optional[DrawSpec] = None) -> JoinSample:
         """``B`` independent global Poisson draws in one shard_map dispatch
         (DESIGN.md §10): vmap over split keys inside each shard, one psum
         for the global counts. The gathered result carries a leading batch
@@ -344,6 +364,7 @@ class ShardedPlan:
         (same per-shard draws, same gather). Keys are bucketed to powers of
         two exactly like the single-device batched path.
         """
+        cap, acap = self._call_overrides(spec, cap, acap)
         if self.stacked.p is None:
             raise ValueError("plan has no prob_var; use full_join")
         batch = int(keys.shape[0])
@@ -368,8 +389,10 @@ class ShardedPlan:
 
     def sample_auto(self, key, max_doublings: Optional[int] = None,
                     cap: Optional[int] = None,
-                    acap: Optional[int] = None) -> JoinSample:
+                    acap: Optional[int] = None,
+                    spec: Optional[DrawSpec] = None) -> JoinSample:
         """Redraw with doubled per-shard capacity until no shard overflows."""
+        cap, acap = self._call_overrides(spec, cap, acap)
         return redraw_with_doubling(
             lambda c, a: self.sample(key, cap=c, acap=a),
             cap or self.cap, acap or self.acap,

@@ -57,6 +57,12 @@ class TrainConfig:
     straggler_factor: float = 3.0
     data: str = "poisson_join"  # or "synthetic"
     log_every: int = 10
+    # Live-corpus schedule: ``(step, DeltaBatch)`` events applied by the
+    # data source at step-aligned version barriers (DESIGN.md §13). The
+    # schedule is part of the run's identity: resume replays it from the
+    # base snapshot, and the checkpoint records the data version so a
+    # mismatched schedule fails loudly instead of drifting silently.
+    deltas: tuple = ()
 
 
 def _train_step(cfg, opt_cfg, params, opt_state, batch, step):
@@ -91,16 +97,26 @@ def train(tc: TrainConfig, hooks: Optional[Dict[str, Callable]] = None) -> Dict[
     if tc.data == "poisson_join":
         db = make_corpus_db(n_docs=512, n_clusters=16, seq_len=tc.seq_len + 1,
                             vocab=cfg.vocab, seed=tc.seed)
-        source = PoissonJoinSource(db, tc.seq_len + 1, tc.batch, seed=tc.seed)
+        source = PoissonJoinSource(db, tc.seq_len + 1, tc.batch, seed=tc.seed,
+                                   deltas=tc.deltas)
     else:
         source = SyntheticLMSource(cfg.vocab, tc.seq_len, tc.batch, seed=tc.seed)
 
     # --- resume ---------------------------------------------------------------
     ckpt = CheckpointManager(tc.ckpt_dir, keep_n=tc.keep_n)
-    state_tpl = {"params": params, "opt": opt_state}
+    state_tpl = {"params": params, "opt": opt_state,
+                 "data_version": np.zeros((), np.int64)}
     start, restored = ckpt.restore(state_tpl)
     if start is not None:
         params, opt_state = restored["params"], restored["opt"]
+        if hasattr(source, "version_at") and start > 0:
+            want = source.version_at(start - 1)
+            got = int(restored["data_version"])
+            if got != want:
+                raise RuntimeError(
+                    f"checkpoint data_version={got} but the delta schedule "
+                    f"puts step {start - 1} at version {want}; resume must "
+                    f"replay the run's exact schedule (DESIGN.md §13)")
         print(f"[train] resumed from step {start}")
     start = (start or 0)
 
@@ -110,9 +126,17 @@ def train(tc: TrainConfig, hooks: Optional[Dict[str, Callable]] = None) -> Dict[
     ewma = None
     losses = []
     straggler_events = []
+    doc_ids = []        # per-step sampled doc ids (poisson_join source)
+    data_versions = []  # per-step snapshot version each batch was drawn at
+    data_version = 0
     for step in range(start, tc.steps):
         batch = source.batch_at(step)
         batch.pop("sampled_k", None)
+        step_docs = batch.pop("doc_ids", None)
+        data_version = batch.pop("db_version", data_version)
+        if step_docs is not None:
+            doc_ids.append(np.asarray(step_docs))
+        data_versions.append(data_version)
         t0 = time.time()
         with mesh:
             params, opt_state, metrics = step_fn(params, opt_state, batch,
@@ -133,9 +157,12 @@ def train(tc: TrainConfig, hooks: Optional[Dict[str, Callable]] = None) -> Dict[
         if "on_step" in hooks:
             hooks["on_step"](step, loss)
         if (step + 1) % tc.ckpt_every == 0 or step + 1 == tc.steps:
-            ckpt.save(step + 1, {"params": params, "opt": opt_state})
+            ckpt.save(step + 1, {"params": params, "opt": opt_state,
+                                 "data_version": np.asarray(data_version,
+                                                            np.int64)})
     ckpt.wait()
     return {"losses": losses, "params": params, "straggler_events": straggler_events,
+            "doc_ids": doc_ids, "data_versions": data_versions,
             "final_step": tc.steps}
 
 

@@ -5,7 +5,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import Atom, Database, JoinQuery, PoissonSampler, estimate, sampling
+from repro.core import Atom, Database, JoinQuery, estimate, sampling
+from repro.engine import QueryEngine
 
 
 def _db():
@@ -20,7 +21,7 @@ Q = JoinQuery((Atom.of("R", "x", "p"), Atom.of("S", "x", "z")), prob_var="p")
 
 
 def test_overflow_flagged_and_redraw_succeeds():
-    s = PoissonSampler(_db(), Q)
+    s = QueryEngine(_db()).compile(Q)
     tiny = s.sample(jax.random.key(0), cap=8, acap=16)
     assert bool(tiny.overflow), "a cap far below E[k] must flag overflow"
     full = s.sample_auto(jax.random.key(0))
@@ -29,7 +30,7 @@ def test_overflow_flagged_and_redraw_succeeds():
 
 
 def test_default_capacity_rarely_overflows():
-    s = PoissonSampler(_db(), Q)
+    s = QueryEngine(_db()).compile(Q)
     overflows = sum(bool(s.sample(jax.random.key(i)).overflow) for i in range(50))
     assert overflows == 0  # 6-sigma planning: P(overflow) ~ 1e-9 per draw
 

@@ -1,0 +1,68 @@
+"""The public-API drift gate: an export/signature change must land with a
+regenerated API.md (exit 1 on drift, exit 3 when no snapshot is committed
+— the same verdict taxonomy as tools/check_bench.py), and the COMMITTED
+snapshot must gate clean against the live modules, so tier-1 itself fails
+on undocumented API drift.
+"""
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "tools"))
+
+import check_api  # noqa: E402
+
+
+def test_render_is_deterministic():
+    assert check_api.render() == check_api.render()
+
+
+def test_render_covers_the_three_packages_and_key_exports():
+    text = check_api.render()
+    for mod in check_api.MODULES:
+        assert f"## {mod}" in text
+    # spot-checks: one load-bearing export per package, with signatures
+    assert "class QueryEngine" in text
+    assert "class DrawSpec" in text
+    assert "class PoissonJoinSource" in text
+    assert "def corpus_delta(" in text
+    # class surfaces include their public methods
+    assert "def sample_batch(" in text
+
+
+def test_check_fresh_snapshot_passes(tmp_path, capsys):
+    p = tmp_path / "API.md"
+    p.write_text(check_api.render())
+    assert check_api.check(p) == 0
+    assert "ok" in capsys.readouterr().out
+
+
+def test_check_drift_exit_1_with_diff_and_refresh_hint(tmp_path, capsys):
+    p = tmp_path / "API.md"
+    p.write_text(check_api.render().replace(
+        "class QueryEngine", "class QueryEngineRenamed"))
+    rc = check_api.check(p)
+    assert rc == check_api.EXIT_DRIFT == 1
+    err = capsys.readouterr().err
+    assert "QueryEngineRenamed" in err  # the diff names the drifted line
+    assert "--update" in err            # and the refresh playbook
+
+
+def test_missing_snapshot_exit_3(tmp_path, capsys):
+    rc = check_api.check(tmp_path / "API.md")
+    assert rc == check_api.EXIT_MISSING_BASELINE == 3
+    assert "--update" in capsys.readouterr().err
+
+
+def test_update_then_check_roundtrip(tmp_path):
+    p = tmp_path / "API.md"
+    assert check_api.update(p) == 0
+    assert check_api.check(p) == 0
+
+
+def test_committed_snapshot_matches_live_surface():
+    """The repo's committed API.md can never itself be stale: any public
+    export or signature change must regenerate it in the same commit."""
+    assert check_api.DEFAULT_BASELINE.is_file(), \
+        "API.md missing from the repo root"
+    assert check_api.check(check_api.DEFAULT_BASELINE) == 0

@@ -1,0 +1,201 @@
+"""Determinism contracts of the engine-native training data plane
+(DESIGN.md §13): ``PoissonJoinSource.batch_at(step)`` is a pure function
+of (seed, step, delta schedule) —
+
+  * invariant under dp re-meshing (the same byte stream on 1 vs 8 virtual
+    devices, checked in subprocesses);
+  * resumable mid-epoch (a fresh source consumed from step R matches the
+    uninterrupted stream, across delta barriers);
+  * delta-barrier aligned (no prefetch window straddles two snapshot
+    versions; every batch records the version it was drawn at);
+  * explicit about capacity rounding: a draw that undershoots ``batch``
+    wraps doc ids deterministically and increments the ``wrapped``
+    counter instead of wrapping silently.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import Database
+from repro.data import PoissonJoinSource, corpus_delta, make_corpus_db
+
+SEQ, VOCAB = 13, 97
+
+
+def _source(db=None, batch=4, seed=7, deltas=(), window=4, **kw):
+    db = db if db is not None else make_corpus_db(96, 8, SEQ, VOCAB, seed=3)
+    return PoissonJoinSource(db, SEQ, batch, seed=seed, deltas=deltas,
+                             window=window, **kw)
+
+
+def _deltas(db, at=(6,)):
+    """A schedule of live-corpus events, each built against the snapshot it
+    applies to (insert + retire at every barrier)."""
+    events, snap = [], db
+    for i, s in enumerate(at):
+        d = corpus_delta(snap, SEQ, VOCAB, insert=16, retire=range(4),
+                         seed=100 + i)
+        events.append((s, d))
+        snap = snap.apply(d)
+    return tuple(events)
+
+
+def _stream(src, steps, start=0):
+    out = []
+    for s in range(start, steps):
+        b = src.batch_at(s)
+        out.append({k: np.asarray(v) for k, v in b.items()})
+    return out
+
+
+# -- re-meshing invariance (subprocess: 1 vs 8 virtual devices) --------------
+
+MESH_SCRIPT = textwrap.dedent("""
+    import json
+    import numpy as np
+    from repro.data import PoissonJoinSource, corpus_delta, make_corpus_db
+
+    SEQ, VOCAB = 13, 97
+    db = make_corpus_db(96, 8, SEQ, VOCAB, seed=3)
+    delta = corpus_delta(db, SEQ, VOCAB, insert=16, retire=range(4), seed=100)
+    src = PoissonJoinSource(db, SEQ, 4, seed=7, deltas=((6, delta),), window=4)
+    out = []
+    for step in range(10):
+        b = src.batch_at(step)
+        out.append({
+            "doc_ids": np.asarray(b["doc_ids"]).tolist(),
+            "tokens": np.asarray(b["tokens"]).tolist(),
+            "sampled_k": int(b["sampled_k"]),
+            "db_version": int(b["db_version"]),
+        })
+    print("STREAM:" + json.dumps(out))
+""")
+
+
+def _run_stream(devices: int):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", MESH_SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + "\n" + r.stderr
+    line = [l for l in r.stdout.splitlines() if l.startswith("STREAM:")][0]
+    return json.loads(line[len("STREAM:"):])
+
+
+@pytest.mark.slow
+def test_batch_stream_invariant_under_re_meshing():
+    """1 vs 8 virtual devices: the full stream (tokens, doc ids, raw counts,
+    versions) is byte-identical — dp re-meshing cannot skew sampling."""
+    assert _run_stream(1) == _run_stream(8)
+
+
+# -- resume-mid-epoch equality ----------------------------------------------
+
+def test_resume_mid_epoch_bit_identical():
+    """A fresh source consumed from step R reproduces the uninterrupted
+    stream exactly, including across a delta barrier before AND after R."""
+    db = make_corpus_db(96, 8, SEQ, VOCAB, seed=3)
+    deltas = _deltas(db, at=(3, 9))
+    full = _stream(_source(db, deltas=deltas), 12)
+    resumed = _stream(_source(db, deltas=deltas), 12, start=5)
+    for a, b in zip(full[5:], resumed):
+        for k in a:
+            np.testing.assert_array_equal(a[k], b[k]), k
+
+
+def test_rewind_requires_fresh_source():
+    """The engine only moves forward: stepping back across an applied
+    barrier is an explicit error, not silently-wrong data."""
+    db = make_corpus_db(96, 8, SEQ, VOCAB, seed=3)
+    src = _source(db, deltas=_deltas(db, at=(4,)))
+    src.batch_at(6)  # advances past the barrier
+    with pytest.raises(ValueError, match="fresh source"):
+        src.batch_at(2)
+
+
+# -- delta-barrier alignment -------------------------------------------------
+
+def test_no_window_straddles_a_barrier():
+    """Window bounds are pure in (step, schedule) and clipped so no window
+    contains steps of two snapshot versions — even for barriers off the
+    ``window`` alignment grid."""
+    db = make_corpus_db(96, 8, SEQ, VOCAB, seed=3)
+    deltas = _deltas(db, at=(5, 9))  # neither aligned to window=4
+    src = _source(db, deltas=deltas)
+    for step in range(16):
+        s0, end = src._window_bounds(step)
+        assert s0 <= step < end
+        for e, _ in deltas:
+            assert not (s0 < e < end), \
+                f"window [{s0},{end}) straddles the barrier at {e}"
+        # purity: a fresh source computes the same bounds
+        assert _source(db, deltas=deltas)._window_bounds(step) == (s0, end)
+
+
+def test_batches_record_their_snapshot_version():
+    db = make_corpus_db(96, 8, SEQ, VOCAB, seed=3)
+    deltas = _deltas(db, at=(5, 9))
+    src = _source(db, deltas=deltas)
+    got = [b["db_version"] for b in _stream(src, 12)]
+    assert got == [src.version_at(s) for s in range(12)]
+    assert got == [0] * 5 + [1] * 4 + [2] * 3
+
+
+def test_pre_barrier_batches_unaffected_by_schedule():
+    """Batches before the first barrier are identical with and without the
+    delta schedule — a scheduled future event must not perturb the past."""
+    db = make_corpus_db(96, 8, SEQ, VOCAB, seed=3)
+    plain = _stream(_source(db), 6)
+    live = _stream(_source(db, deltas=_deltas(db, at=(6,))), 6)
+    for a, b in zip(plain, live):
+        np.testing.assert_array_equal(a["tokens"], b["tokens"])
+        np.testing.assert_array_equal(a["doc_ids"], b["doc_ids"])
+
+
+# -- capacity rounding + the wrap path (satellite: no silent wrap) -----------
+
+def test_capacity_rounds_to_lane_multiple_and_covers_batch():
+    src = _source(batch=200)
+    assert src.cap % 128 == 0
+    assert src.cap >= 200
+
+
+def test_small_sample_wrap_is_deterministic_and_counted():
+    """A corpus so small/low-quality the draw can never fill ``batch``:
+    doc ids wrap cyclically over the k sampled docs and every served batch
+    increments ``wrapped`` — never a silent modulo."""
+    db = Database.from_columns({
+        "Doc": {"doc": np.arange(6), "clust": np.zeros(6, np.int64)},
+        "ClusterQuality": {"clust": np.array([0]), "p": np.array([0.4])},
+        "_tokens": {"flat":
+                    np.random.default_rng(0).integers(0, VOCAB, 6 * SEQ)},
+    })
+    src = PoissonJoinSource(db, SEQ, batch=16, seed=11, window=2)
+    assert src.wrapped == 0
+    served = 0
+    for step in range(6):
+        b = src.batch_at(step)
+        k = int(b["sampled_k"])
+        assert k < 16  # only 6 docs exist; the draw can never fill 16
+        served += 1
+        docs = np.asarray(b["doc_ids"])
+        assert docs.shape == (16,)
+        lanes = max(k, 1)  # k == 0 serves the first buffer lane
+        np.testing.assert_array_equal(
+            docs, docs[np.arange(16) % lanes],
+            err_msg="wrap must repeat the sampled prefix cyclically")
+    assert src.wrapped == served
+    assert src.overflows == 0
+
+
+def test_wrapped_counter_stays_zero_when_draws_fill_batch():
+    src = _source(batch=2)  # 96 docs, mean quality 0.3: k >= 2 essentially
+    for step in range(4):   # always under seed 7 (bit-frozen by determinism)
+        src.batch_at(step)
+    assert src.wrapped == 0

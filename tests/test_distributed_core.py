@@ -15,6 +15,7 @@ SCRIPT = textwrap.dedent("""
     import numpy as np, jax, jax.numpy as jnp
     from repro.core import *
     from repro.core.distributed import ShardedPoissonSampler
+    from repro.engine import QueryEngine
 
     rng = np.random.default_rng(2)
     NPER, NPOOL, NAGE = 90, 8, 3
@@ -35,7 +36,8 @@ SCRIPT = textwrap.dedent("""
     assert len(jax.devices()) == 4, jax.devices()
     mesh = jax.make_mesh((4,), ("data",))
     ds = ShardedPoissonSampler(db, q, mesh, axes=("data",))
-    ref = PoissonSampler(db, q)
+    engine = QueryEngine(db)
+    ref = engine.compile(q)
     exp = ref.expected_k()
     totals = [int(ds.sample_step(jax.random.key(i))[1]) for i in range(30)]
     sd = float(estimate.sample_std(ref.w, ref.p))
@@ -43,7 +45,7 @@ SCRIPT = textwrap.dedent("""
     assert abs(z) < 4.5, (np.mean(totals), exp, z)
 
     smp, _ = ds.sample_step(jax.random.key(99))
-    full = yannakakis.full_join(db, q)
+    full = engine.full_join(q)
     fullset = set(zip(*[np.asarray(full[k]) for k in ("per1","per2","pool")]))
     cnt = np.asarray(smp.count)
     for sh in range(4):

@@ -49,6 +49,7 @@ def test_full_join_bit_identical_to_direct_path(db, query, rep):
         np.testing.assert_array_equal(np.asarray(got[v]), np.asarray(want[v]))
 
 
+@pytest.mark.filterwarnings("ignore:core.yannakakis.full_join is deprecated")
 def test_full_join_facade_matches_engine(db, query):
     engine = QueryEngine(db)
     a = engine.full_join(query)
@@ -59,6 +60,7 @@ def test_full_join_facade_matches_engine(db, query):
 
 # -- (b) Poisson sampling ---------------------------------------------------
 
+@pytest.mark.filterwarnings("ignore:core.PoissonSampler is deprecated")
 def test_poisson_sample_bit_identical_to_sampler(db, query):
     engine = QueryEngine(db)
     sampler = PoissonSampler(db, query)

@@ -1,4 +1,11 @@
-"""End-to-end Poisson sampling over joins (Index-and-Probe vs M&S)."""
+"""End-to-end Poisson sampling over joins (Index-and-Probe vs M&S).
+
+This suite deliberately exercises the *deprecated* facades
+(``core.PoissonSampler``, ``core.yannakakis.full_join``) — it is their
+contract coverage until removal, so the DeprecationWarnings are expected
+here (and asserted explicitly in ``TestDeprecation``). New code goes
+through ``repro.engine.QueryEngine``.
+"""
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -6,6 +13,11 @@ import pytest
 
 from repro.core import (
     Atom, Database, JoinQuery, PoissonSampler, estimate, yannakakis,
+)
+
+pytestmark = pytest.mark.filterwarnings(
+    "ignore:core.PoissonSampler is deprecated",
+    "ignore:core.yannakakis.full_join is deprecated",
 )
 
 
@@ -117,3 +129,24 @@ def test_empty_join_sampling():
     assert s.join_size == 0
     smp = s.sample(jax.random.key(0))
     assert int(smp.count) == 0
+
+
+class TestDeprecation:
+    """The legacy facades must say, loudly, where to go instead."""
+
+    def _db_q(self):
+        db = Database.from_columns({"R": {"x": [1, 2], "p": [0.5, 0.5]},
+                                    "S": {"x": [1, 2]}})
+        q = JoinQuery((Atom.of("R", "x", "p"), Atom.of("S", "x")),
+                      prob_var="p")
+        return db, q
+
+    def test_poisson_sampler_warns(self):
+        db, q = self._db_q()
+        with pytest.warns(DeprecationWarning, match="QueryEngine"):
+            PoissonSampler(db, q)
+
+    def test_full_join_warns(self):
+        db, q = self._db_q()
+        with pytest.warns(DeprecationWarning, match="QueryEngine"):
+            yannakakis.full_join(db, q)

@@ -198,7 +198,8 @@ def test_full_join_matches_binary_join():
         "T": {"z": rng.integers(0, 5, 20), "w": rng.integers(0, 5, 20)},
     })
     q = JoinQuery((Atom.of("R", "x", "y"), Atom.of("S", "y", "z"), Atom.of("T", "z", "w")))
-    sya = yannakakis.full_join(db, q, rep="usr")
+    from repro.engine import QueryEngine
+    sya = QueryEngine(db, rep="usr").full_join(q)
     bj = yannakakis.binary_join(db, q)
     vs = sorted(sya)
     a = sorted(zip(*[np.asarray(sya[v]) for v in vs]))

@@ -84,9 +84,10 @@ class TestDataPipeline:
         clusters = np.asarray(db.relations["Doc"].column("clust"))
         counts = np.zeros(2)
         for step in range(30):
-            k = int(src.sampler.sample(jax.random.fold_in(src.key, step)).count)
-            s = src.sampler.sample(jax.random.fold_in(src.key, step))
-            docs = np.asarray(s.columns["doc"])[:k]
+            s = src.engine.sample(src.query,
+                                  jax.random.fold_in(src.key, step),
+                                  cap=src.cap)
+            docs = np.asarray(s.columns["doc"])[:int(s.count)]
             for c in clusters[docs]:
                 counts[c] += 1
         n0 = (clusters == 0).sum()

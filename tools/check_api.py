@@ -1,0 +1,158 @@
+#!/usr/bin/env python
+"""CI public-API drift gate (mirrors tools/check_bench.py's verdicts).
+
+Renders the public surface of ``repro.engine``, ``repro.data`` and
+``repro.core`` — every ``__all__`` export plus ``inspect.signature``
+strings for callables and per-class public methods/properties — and
+compares it against the committed ``API.md`` snapshot:
+
+  * any mismatch (a renamed export, a changed signature, a new public
+    method) fails with exit code 1 and prints a unified diff — an API
+    change must land TOGETHER with its regenerated snapshot, so review
+    sees the surface change explicitly;
+  * a missing ``API.md`` fails with the distinct exit code 3 (coverage
+    loss, not drift — same taxonomy as check_bench);
+  * ``--update`` regenerates the snapshot in place.
+
+Unlike check_bench this tool imports the live modules (it needs jax), so
+CI runs it in the test job after dependencies are installed:
+
+  PYTHONPATH=src python tools/check_api.py            # gate
+  PYTHONPATH=src python tools/check_api.py --update   # refresh API.md
+"""
+from __future__ import annotations
+
+import argparse
+import difflib
+import importlib
+import inspect
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+if str(ROOT / "src") not in sys.path:  # usable without PYTHONPATH=src
+    sys.path.insert(0, str(ROOT / "src"))
+
+MODULES = ("repro.engine", "repro.data", "repro.core")
+DEFAULT_BASELINE = ROOT / "API.md"
+EXIT_DRIFT = 1
+EXIT_MISSING_BASELINE = 3  # no snapshot committed at all
+
+# Default values whose repr embeds an object address would make the
+# snapshot nondeterministic; scrub them.
+_ADDR = re.compile(r" at 0x[0-9a-fA-F]+")
+
+HEADER = """\
+# Public API surface
+
+Snapshot of the public exports (`__all__`) of `repro.engine`,
+`repro.data` and `repro.core`, with signatures for callables and the
+public methods/properties defined on each exported class. CI re-renders
+this from the live modules and fails on any difference
+(`tools/check_api.py`), so an API change must land together with its
+regenerated snapshot. Refresh with:
+
+    PYTHONPATH=src python tools/check_api.py --update
+
+Generated file — do not edit by hand.
+"""
+
+
+def _sig(obj) -> str:
+    try:
+        s = str(inspect.signature(obj))
+    except (ValueError, TypeError):
+        return "(...)"  # builtins / C-level callables without signatures
+    return _ADDR.sub("", s)
+
+
+def _describe(name: str, obj) -> list[str]:
+    """Render one export. Classes list their OWN public methods and
+    properties (``vars(cls)``, not inherited ones) so a facade class
+    growing a method shows up as drift without dragging in base-class
+    noise."""
+    if inspect.ismodule(obj):
+        return [f"module {name}"]
+    if inspect.isclass(obj):
+        lines = [f"class {name}{_sig(obj)}"]
+        for attr, raw in sorted(vars(obj).items()):
+            if attr.startswith("_"):
+                continue
+            if isinstance(raw, property):
+                lines.append(f"    property {attr}")
+            elif isinstance(raw, staticmethod):
+                lines.append(f"    staticmethod {attr}{_sig(raw.__func__)}")
+            elif isinstance(raw, classmethod):
+                lines.append(f"    classmethod {attr}{_sig(raw.__func__)}")
+            elif callable(raw):
+                lines.append(f"    def {attr}{_sig(raw)}")
+        return lines
+    if callable(obj):
+        return [f"def {name}{_sig(obj)}"]
+    return [f"{name}: {type(obj).__name__}"]
+
+
+def render() -> str:
+    """The full snapshot text, deterministically ordered."""
+    parts = [HEADER]
+    for modname in MODULES:
+        mod = importlib.import_module(modname)
+        exported = getattr(mod, "__all__", None)
+        if exported is None:
+            print(f"check_api: {modname} defines no __all__ — the public "
+                  f"surface must be explicit to be snapshottable",
+                  file=sys.stderr)
+            raise SystemExit(2)
+        body: list[str] = []
+        for name in sorted(exported):
+            body.extend(_describe(name, getattr(mod, name)))
+        parts.append(f"\n## {modname}\n\n```text\n" + "\n".join(body)
+                     + "\n```\n")
+    return "".join(parts)
+
+
+def check(baseline: Path) -> int:
+    if not baseline.is_file():
+        print(f"check_api: no snapshot at {baseline} — record one with "
+              f"`PYTHONPATH=src python tools/check_api.py --update`",
+              file=sys.stderr)
+        return EXIT_MISSING_BASELINE
+    live = render()
+    committed = baseline.read_text()
+    if live == committed:
+        n = sum(1 for ln in live.splitlines()
+                if ln.startswith(("class ", "def ", "module ")))
+        print(f"check_api: {baseline.name} matches the live surface "
+              f"({n} top-level exports across {len(MODULES)} modules) ok")
+        return 0
+    diff = difflib.unified_diff(
+        committed.splitlines(keepends=True), live.splitlines(keepends=True),
+        fromfile=f"{baseline.name} (committed)", tofile="live surface")
+    print("check_api: FAILED — public API drifted from the committed "
+          "snapshot", file=sys.stderr)
+    sys.stderr.writelines(diff)
+    print("check_api: if the change is intentional, refresh with "
+          "`PYTHONPATH=src python tools/check_api.py --update` and commit "
+          "the new API.md", file=sys.stderr)
+    return EXIT_DRIFT
+
+
+def update(baseline: Path) -> int:
+    baseline.write_text(render())
+    print(f"check_api: wrote {baseline}")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", type=Path, default=DEFAULT_BASELINE,
+                    help="snapshot path (default: repo-root API.md)")
+    ap.add_argument("--update", action="store_true",
+                    help="regenerate the snapshot instead of gating")
+    args = ap.parse_args()
+    return update(args.baseline) if args.update else check(args.baseline)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
