@@ -11,7 +11,6 @@ CSV and pass CI.
 from __future__ import annotations
 
 import argparse
-import os
 import sys
 import traceback
 
@@ -25,19 +24,24 @@ def main() -> None:
     args = ap.parse_args()
     if args.tiny:
         # Before the suite imports: sizes are chosen at module/run scope.
-        os.environ["REPRO_BENCH_TINY"] = "1"
+        from repro import config
+        config.set_bench_tiny(True)
 
     from . import (bench_position_sampling, bench_uniform_e2e, bench_poisson,
-                   bench_build_probe, bench_probe_fused, bench_full_join,
-                   bench_qc, bench_caching, bench_engine_cache,
-                   bench_sharded_engine, bench_serve, bench_throughput,
-                   bench_updates, bench_pipeline, bench_kernels, roofline)
+                   bench_build_probe, bench_probe_fused, bench_draw_fused,
+                   bench_full_join, bench_qc, bench_caching,
+                   bench_engine_cache, bench_sharded_engine, bench_serve,
+                   bench_throughput, bench_updates, bench_pipeline,
+                   bench_kernels, roofline)
     suites = [
         ("fig7_position_sampling", bench_position_sampling.run),
         ("fig8_uniform_e2e", bench_uniform_e2e.run),
         ("fig9_poisson", bench_poisson.run),
         ("table3_build_probe", bench_build_probe.run),
+        # Both feed the "probe" suite / BENCH_probe.json: fused GET rows,
+        # then the one-launch fused-draw rows (DESIGN.md §14).
         ("probe", bench_probe_fused.run),
+        ("probe", bench_draw_fused.run),
         ("table4_full_join", bench_full_join.run),
         ("fig10_qc", bench_qc.run),
         ("table6_caching", bench_caching.run),

@@ -1,17 +1,18 @@
 """Timing helpers: jit, warm up, block_until_ready, report microseconds."""
 from __future__ import annotations
 
-import os
 import time
 from typing import Callable
 
 import jax
 
+from repro import config
+
 
 def tiny() -> bool:
     """True in bench-smoke mode (``benchmarks.run --tiny``): suites shrink
     their workloads so CI exercises every path in seconds."""
-    return os.environ.get("REPRO_BENCH_TINY", "") not in ("", "0")
+    return config.bench_tiny()
 
 
 def time_fn(fn: Callable, *args, reps: int = 5, warmup: int = 2, **kw) -> float:

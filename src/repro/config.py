@@ -1,0 +1,183 @@
+"""Process-wide kernel + platform configuration (DESIGN.md §14).
+
+Before this module, kernel selection leaked through four environment
+variables read at call time from four different places —
+``REPRO_PALLAS_DISABLE``/``REPRO_PALLAS_INTERPRET``/``REPRO_PALLAS_PREFER``
+in ``kernels/ops.py``, the fused-GET VMEM budget in ``core/probe.py``, the
+bench-smoke flag in ``benchmarks/timing.py``, and the host-device count in
+``launch/mesh.py``. ``KernelPolicy`` is the one value object for all of it:
+
+  * **frozen + hashable** — a policy can be compared, cached against, and
+    baked into plan identity without aliasing surprises;
+  * **env vars are the default constructor only** — ``policy_from_env()``
+    parses the three ``REPRO_PALLAS_*`` variables with their historical
+    semantics (below) and nothing else ever reads them; the grep lint
+    ``tools/check_env.py`` fails CI on raw ``REPRO_*`` reads outside this
+    module;
+  * **scoped override** — ``with override(KernelPolicy(...)):`` installs a
+    policy for the dynamic extent (contextvar, so async/thread safe), and
+    every ``policy=`` keyword threaded through ``kernels/ops.py`` /
+    ``core/probe.py`` takes a per-call override on top.
+
+Resolution order (first hit wins — DESIGN.md §14):
+
+    per-call ``policy=``  >  ``override(...)`` context  >  environment
+
+Exact env semantics (kept bit-for-bit from the pre-consolidation readers;
+the CI matrix relies on ``REPRO_PALLAS_INTERPRET=''`` meaning *interpret*):
+
+    enabled   = REPRO_PALLAS_DISABLE  in ("", "0")   (default "0")
+    interpret = REPRO_PALLAS_INTERPRET != "0"        (default "1")
+    prefer    = REPRO_PALLAS_PREFER   not in ("","0") (default "0")
+
+Platform setup (``xla_force_host_platform_device_count``) lives here too so
+launch scripts have one import that owns every process-level knob.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import os
+
+__all__ = [
+    "KernelPolicy", "policy_from_env", "current_policy", "override",
+    "DEFAULT_VMEM_LIMIT", "force_host_devices", "bench_tiny",
+    "set_bench_tiny",
+]
+
+# int32 elements kept fully VMEM-resident (bsearch prefix tables, the
+# fused-GET arena, and the fused-draw scratch share this budget — see
+# DESIGN.md §9; ``kernels/ops.py`` re-exports it as VMEM_PREF_LIMIT).
+DEFAULT_VMEM_LIMIT = 1 << 21
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelPolicy:
+    """How Pallas kernels are selected, everywhere (DESIGN.md §14).
+
+    enabled     master switch: False routes every wrapper through its
+                pure-XLA/jnp fallback (the operator escape hatch for a
+                kernel bug; historical ``REPRO_PALLAS_DISABLE=1``).
+    interpret   run kernels in Pallas interpret mode (the validated mode
+                on this CPU container; False = compiled mode on real TPU).
+    prefer      prefer kernels over their XLA twins inside jitted hot
+                paths even in interpret mode (the CI interpret leg pins
+                this so the whole tier-1 suite exercises the kernels).
+    vmem_limit  int32-element budget for VMEM-resident tables (prefix
+                vectors, the packed index arena, fused-draw scratch).
+    fused_draw  allow the one-launch fused draw route (kernels/fused_draw)
+                when capability gates pass; False pins the multi-launch
+                per-node path without touching GET kernel selection.
+    """
+
+    enabled: bool = True
+    interpret: bool = True
+    prefer: bool = False
+    vmem_limit: int = DEFAULT_VMEM_LIMIT
+    fused_draw: bool = True
+
+    @property
+    def preferred(self) -> bool:
+        """Should jitted hot paths *prefer* Pallas kernels over their XLA
+        twins when both are available? True in compiled mode (real TPU —
+        the kernels are the point); in interpret mode the interpreter's
+        per-access overhead loses to XLA inside an already-jitted
+        executor, so hot paths default to XLA unless ``prefer`` pins the
+        kernel path. Capability gates (``enabled``, dtype/VMEM fallbacks)
+        still apply on top."""
+        return self.enabled and (self.prefer or not self.interpret)
+
+
+def policy_from_env() -> KernelPolicy:
+    """The default policy, parsed from the environment *at call time* (so
+    tests and CI legs can flip a var without re-importing anything). The
+    parse of each variable is exactly the historical reader's — in
+    particular ``REPRO_PALLAS_INTERPRET=''`` still means interpret=True
+    (the CI matrix sets the empty string on non-interpret legs)."""
+    env = os.environ.get
+    return KernelPolicy(
+        enabled=env("REPRO_PALLAS_DISABLE", "0") in ("", "0"),
+        interpret=env("REPRO_PALLAS_INTERPRET", "1") != "0",
+        prefer=env("REPRO_PALLAS_PREFER", "0") not in ("", "0"),
+    )
+
+
+_override: "contextvars.ContextVar[KernelPolicy]" = contextvars.ContextVar(
+    "repro_kernel_policy", default=None)
+
+
+def current_policy(policy: KernelPolicy = None) -> KernelPolicy:
+    """Resolve the active policy: per-call ``policy=`` > ``override(...)``
+    context > environment defaults (DESIGN.md §14)."""
+    if policy is not None:
+        return policy
+    installed = _override.get()
+    return installed if installed is not None else policy_from_env()
+
+
+@contextlib.contextmanager
+def override(policy: KernelPolicy):
+    """Install ``policy`` for the dynamic extent of the ``with`` block::
+
+        with repro.config.override(KernelPolicy(prefer=True)):
+            plan = engine.compile(query)   # binds the fused routes
+
+    Contextvar-scoped: concurrent threads/tasks see their own override.
+    Note plans capture routing verdicts at *bind* time — a policy change
+    after ``compile()`` does not rewire an existing plan (recompile, or
+    let ``DrawSpec.kernels`` pin the route as plan identity)."""
+    token = _override.set(policy)
+    try:
+        yield policy
+    finally:
+        _override.reset(token)
+
+
+# ---------------------------------------------------------------------------
+# Platform setup (process-level, owned here so launch scripts import one
+# module for every knob; launch/mesh.py delegates).
+# ---------------------------------------------------------------------------
+
+def force_host_devices(n: int) -> int:
+    """Ask XLA for ``n`` virtual host (CPU) devices; returns the count
+    actually available. Only effective before the backend initializes —
+    appends ``--xla_force_host_platform_device_count`` to ``XLA_FLAGS``
+    and reports (rather than raises) when the backend beat us to it, so
+    callers degrade to the real device count."""
+    import sys
+
+    import jax
+
+    if n > 1:
+        flags = os.environ.get("XLA_FLAGS", "")
+        flag = f"--xla_force_host_platform_device_count={n}"
+        if "--xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = f"{flags} {flag}".strip()
+    got = len(jax.devices())
+    if got < n:
+        print(f"[mesh] requested {n} host devices, backend has {got} "
+              f"(already initialized, or XLA_FLAGS pre-set); using {got}",
+              file=sys.stderr)
+    return got
+
+
+# ---------------------------------------------------------------------------
+# Bench-smoke flag (the only other REPRO_* variable; centralizing the read
+# and the write here keeps the check_env lint trivially green).
+# ---------------------------------------------------------------------------
+
+def bench_tiny() -> bool:
+    """True in bench-smoke mode (``benchmarks.run --tiny``): suites shrink
+    their workloads so CI exercises every path in seconds."""
+    return os.environ.get("REPRO_BENCH_TINY", "") not in ("", "0")
+
+
+def set_bench_tiny(on: bool = True) -> None:
+    """Flip bench-smoke mode for this process (and subprocesses). Set via
+    env because suites size their workloads at module/run scope, possibly
+    in spawned workers that inherit the environment."""
+    if on:
+        os.environ["REPRO_BENCH_TINY"] = "1"
+    else:
+        os.environ.pop("REPRO_BENCH_TINY", None)

@@ -33,20 +33,20 @@ from typing import Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import config
 from repro.kernels import ops
+from repro.kernels.fused_draw import fused_draw, fused_draw_ref
 from repro.kernels.tree_probe import tree_probe
 
+from .sampling import PositionSample
 from .shred import Shred, ShredNode
 
-__all__ = ["get", "get_rows", "csr_get_rows", "usr_get_rows",
-           "usr_get_rows_fused", "csr_get_rows_cached", "fused_available",
-           "select_rep"]
+__all__ = ["get", "get_rows", "gather_columns", "csr_get_rows",
+           "usr_get_rows", "usr_get_rows_fused", "csr_get_rows_cached",
+           "fused_available", "select_rep", "draw_fused_available",
+           "select_draw", "draw_fused"]
 
 I64 = jnp.int64
-
-# Fused-GET VMEM budget: arenas above this int32-element count fall back to
-# the per-node path (the bsearch table limit, shared — DESIGN.md §9).
-FUSED_VMEM_LIMIT = ops.VMEM_PREF_LIMIT
 
 
 def _root_locate(shred: Shred, pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -122,24 +122,29 @@ def usr_get_rows(shred: Shred, pos: jnp.ndarray) -> Dict[str, jnp.ndarray]:
 # Fused USR (single Pallas pass over the packed arena, DESIGN.md §4)
 # ---------------------------------------------------------------------------
 
-def fused_available(shred: Shred) -> bool:
+def fused_available(shred: Shred, policy=None) -> bool:
     """Static verdict: does this shred take the fused kernel path?
-    (arena packed + within the VMEM budget + Pallas not disabled)."""
+    (arena packed + within the active policy's VMEM budget + kernels not
+    disabled). The budget was historically the module constant
+    ``FUSED_VMEM_LIMIT``; it now lives on ``config.KernelPolicy`` so tests
+    and operators shrink it with ``config.override(...)``."""
+    pol = config.current_policy(policy)
     return (shred.packed is not None
-            and shred.packed.layout.size <= FUSED_VMEM_LIMIT
-            and ops.pallas_enabled())
+            and shred.packed.layout.size <= pol.vmem_limit
+            and pol.enabled)
 
 
-def select_rep(shred: Shred, base: str) -> Tuple[str, bool]:
+def select_rep(shred: Shred, base: str, policy=None) -> Tuple[str, bool]:
     """The executor policy both plan layers share (DESIGN.md §4): given the
     rep a plan would use (``usr``/``csr``), return ``(rep, narrow)`` —
     upgrade USR to the fused kernel and enable int32-narrowed sampler
     searches iff the shred packed an arena AND the backend prefers Pallas
     (compiled mode / ``REPRO_PALLAS_PREFER=1``). Single source of truth so
     single-device and sharded plans cannot diverge."""
-    prefer = ops.pallas_preferred()
+    pol = config.current_policy(policy)
+    prefer = pol.preferred
     narrow = shred.packed is not None and prefer
-    if base == "usr" and prefer and fused_available(shred):
+    if base == "usr" and prefer and fused_available(shred, pol):
         return "usr_fused", narrow
     return base, narrow
 
@@ -170,6 +175,100 @@ def usr_get_rows_fused(shred: Shred, pos: jnp.ndarray) -> Dict[str, jnp.ndarray]
                      interpret=ops.interpret_default())
     flat = out.reshape(out.shape[0], -1)[:, :k]
     return {name: flat[i] for i, name in enumerate(packed.layout.names)}
+
+
+# ---------------------------------------------------------------------------
+# Fused one-launch draw (sample + walk in one kernel, DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def draw_fused_available(shred: Shred, dparams, *, method: str, n: int = 0,
+                         policy=None) -> bool:
+    """Static *capability* verdict (no preference): can the one-launch
+    fused draw — or its pure-jnp reference twin — run this method on this
+    shred?  Requires the packed arena within the policy's VMEM budget plus
+    the plan-bound parameter vectors (``sampling.fused_draw_params`` —
+    ``None`` when int32 narrowing cannot be certified).  ``ptbern_flat``
+    additionally materializes n lanes in VMEM, so n shares the budget.
+    Deliberately ignores ``policy.enabled``: the reference route runs with
+    kernels disabled; ``select_draw`` layers the preference gates on top."""
+    pol = config.current_policy(policy)
+    if dparams is None or shred.packed is None:
+        return False
+    if shred.packed.layout.size > pol.vmem_limit:
+        return False
+    if method == "ptbern_flat":
+        return 0 < n <= pol.vmem_limit
+    return method == "exprace"
+
+
+def select_draw(shred: Shred, dparams, *, method: str, n: int = 0,
+                kernels: str = "auto", policy=None) -> str:
+    """Resolve a ``DrawSpec.kernels`` request to the executor draw route —
+    ``'fused'`` (one Pallas launch), ``'reference'`` (same math, plain
+    traced jnp) or ``'pernode'`` (the F64 multi-launch path).  Decided at
+    plan-bind time, like ``select_rep``:
+
+      * ``'auto'``   — fused iff capable AND the policy enables, prefers
+                       and hasn't opted out of the fused draw; else pernode.
+      * ``'fused'``  — explicit request: raise unless capable and enabled.
+      * ``'reference'`` — explicit request: raise unless capable (runs
+                       without Pallas — it is the bit-identity oracle).
+      * ``'pernode'`` — always honored (the precision arbiter).
+    """
+    pol = config.current_policy(policy)
+    capable = draw_fused_available(shred, dparams, method=method, n=n,
+                                   policy=pol)
+    if kernels == "pernode":
+        return "pernode"
+    if kernels == "fused":
+        if not (capable and pol.enabled):
+            raise ValueError(
+                "kernels='fused' requested but the fused draw is "
+                "unavailable here (needs a packed arena within the VMEM "
+                "budget, certified int32 narrowing, an exprace/ptbern_flat "
+                "method, and kernels enabled)")
+        return "fused"
+    if kernels == "reference":
+        if not capable:
+            raise ValueError(
+                "kernels='reference' requested but the fused-draw operands "
+                "are unavailable here (needs a packed arena within the "
+                "VMEM budget and certified int32 narrowing)")
+        return "reference"
+    if kernels != "auto":
+        raise ValueError(f"unknown kernels request {kernels!r}")
+    if capable and pol.enabled and pol.fused_draw and pol.preferred:
+        return "fused"
+    return "pernode"
+
+
+def draw_fused(shred: Shred, dparams, key, *, method: str, cap: int,
+               acap: int = 0, n: int = 0, reference: bool = False,
+               policy=None):
+    """Run the one-launch draw (kernels/fused_draw.py): key -> per-node
+    rows + PositionSample, ONE dispatch.  ``reference=True`` runs the same
+    ``draw_core`` + ``tree_walk`` as plain traced jnp instead — bit-
+    identical in interpret mode by construction.
+
+    Returns ``(node_rows, ps)``: node name -> (cap,) int32 rows (lanes
+    beyond ``ps.count`` arbitrary-but-masked, the GET contract) and a
+    ``PositionSample`` with the usual int64/sentinel-n conventions, so
+    downstream compaction/masking is route-agnostic."""
+    packed = shred.packed
+    key_data = jax.random.key_data(key).astype(jnp.uint32)
+    if reference:
+        rows, pos, cnt, ovf = fused_draw_ref(
+            packed.arena, key_data, dparams, layout=packed.layout,
+            method=method, cap=cap, acap=acap, n=n)
+    else:
+        rows, pos, cnt, ovf = fused_draw(
+            packed.arena, key_data, dparams, layout=packed.layout,
+            method=method, cap=cap, acap=acap, n=n,
+            interpret=ops.interpret_default(policy))
+    node_rows = {name: rows[i]
+                 for i, name in enumerate(packed.layout.names)}
+    ps = PositionSample(pos.astype(I64), cnt.astype(I64), ovf)
+    return node_rows, ps
 
 
 # ---------------------------------------------------------------------------
@@ -297,6 +396,18 @@ def get_rows(shred: Shred, pos: jnp.ndarray, rep: str = None) -> Dict[str, jnp.n
     return csr_get_rows(shred, pos)
 
 
+def gather_columns(shred: Shred, node_rows: Dict[str, jnp.ndarray]) -> Dict[str, jnp.ndarray]:
+    """Per-node row indices -> owned output columns (the gather half of
+    GET).  Shared by the positional routes (``get``) and the fused draw,
+    whose kernel already resolved the rows in-launch."""
+    out: Dict[str, jnp.ndarray] = {}
+    for node in shred.root.nodes():
+        rows = node_rows[node.name]
+        for v in node.owned:
+            out[v] = jnp.take(node.data.column(v), rows, axis=0)
+    return out
+
+
 def get(shred: Shred, pos: jnp.ndarray, rep: str = None) -> Dict[str, jnp.ndarray]:
     """idx.GET(pos): the bag of join tuples at the given flat positions.
 
@@ -304,10 +415,4 @@ def get(shred: Shred, pos: jnp.ndarray, rep: str = None) -> Dict[str, jnp.ndarra
     (>= join_size, the caller's invalid sentinel) contain arbitrary values and
     must be masked by the caller — this keeps GET shape-static.
     """
-    node_rows = get_rows(shred, pos, rep)
-    out: Dict[str, jnp.ndarray] = {}
-    for node in shred.root.nodes():
-        rows = node_rows[node.name]
-        for v in node.owned:
-            out[v] = jnp.take(node.data.column(v), rows, axis=0)
-    return out
+    return gather_columns(shred, get_rows(shred, pos, rep))

@@ -62,6 +62,7 @@ __all__ = [
     "hybrid_positions",
     "exprace_positions",
     "pt_bern_flat_positions",
+    "fused_draw_params",
     "pt_positions_host",
     "HYBRID_THRESHOLD",
 ]
@@ -263,6 +264,47 @@ def exprace_positions(
     positions = prefE[rO] + jnp.clip(local_out, 0, jnp.maximum(w[rO] - 1, 0))
     overflow = jnp.logical_or(M > acap, K > cap)
     return _finish(positions, tvalid, n, overflow)
+
+
+def fused_draw_params(w, p, prefE):
+    """Plan-bound operand vectors for the one-launch fused draw
+    (kernels/fused_draw.py, DESIGN.md §14) — the EXPRACE thinning tables
+    (mass prefix, per-cell rates, complement signs) plus the int32-narrowed
+    root prefixes, precomputed once per shred bind so the kernel sees only
+    VMEM-ready arrays.
+
+    Called *eagerly* on concrete arrays (engine/plan._bind_shred). The
+    float tables are accumulated in f64 and cast to f32 — the fused route
+    is a float32 sampler end to end (TPU-native; the F64 multi-launch path
+    stays the precision arbiter, module docstring). Returns ``None`` when
+    the int32 narrowing cannot be certified (join + R beyond int32, or an
+    empty join) — one more rung of the static fallback ladder.
+    """
+    R = int(w.shape[0])
+    n = int(prefE[-1])
+    # offE[-1] = n + R must fit the int32 complement offsets.
+    if n <= 0 or n + R >= (1 << 31) - 1:
+        return None
+    p64 = jnp.clip(jnp.asarray(p, F64), 0.0, 1.0)
+    comp = p64 > 0.5                     # sample failures instead (EXPRACE)
+    pi = jnp.where(comp, 1.0 - p64, p64)
+    lam = -jnp.log1p(-jnp.minimum(pi, 0.5))
+    wF = jnp.asarray(w, F64)
+    zero1 = jnp.zeros((1,), F64)
+    massE = jnp.concatenate([zero1, jnp.cumsum(wF * lam)])
+    izero1 = jnp.zeros((1,), I64)
+    cwE = jnp.concatenate([izero1, jnp.cumsum(jnp.where(comp, w, 0))])
+    offE = jnp.concatenate([izero1, jnp.cumsum(w + 1)])
+    return {
+        "massE": massE.astype(jnp.float32),
+        "lam": lam.astype(jnp.float32),
+        "sign": jnp.where(comp, -1, 1).astype(jnp.int32),
+        "w32": jnp.asarray(w).astype(jnp.int32),
+        "prefE32": jnp.asarray(prefE).astype(jnp.int32),
+        "cwE": cwE.astype(jnp.int32),
+        "offE": offE.astype(jnp.int32),
+        "p32": p64.astype(jnp.float32),
+    }
 
 
 def pt_bern_flat_positions(key, root_p, prefE, n: int, cap: int) -> PositionSample:

@@ -192,7 +192,8 @@ class QueryEngine:
                 rep: Optional[str] = None,
                 method: Optional[str] = None,
                 project: Optional[tuple] = None,
-                narrow: Optional[bool] = None) -> CompiledPlan:
+                narrow: Optional[bool] = None,
+                kernels: Optional[str] = None) -> CompiledPlan:
         """Plan + index + jit for a query; cached by fingerprint.
 
         ``spec`` (or the equivalent legacy kwargs — see ``DrawSpec``):
@@ -203,13 +204,14 @@ class QueryEngine:
         """
         spec = self._resolve_spec(
             spec, rep=rep, method=method,
-            project=tuple(project) if project else None, narrow=narrow)
+            project=tuple(project) if project else None, narrow=narrow,
+            kernels=kernels)
         crep = spec.rep or self.rep
         if spec.project is not None and query.prob_var is not None \
                 and query.prob_var not in spec.project:
             raise ValueError("prob_var (y) must be in the projection A")
         key = executor_key(query, crep, spec.method, spec.project,
-                           self.db.version, spec.narrow)
+                           self.db.version, spec.narrow, spec.kernels)
         hit = self._plans.get(key)
         if hit is not None:
             self._plans.move_to_end(key)
@@ -232,6 +234,7 @@ class QueryEngine:
                         method: Optional[str] = None,
                         project: Optional[tuple] = None,
                         narrow: Optional[bool] = None,
+                        kernels: Optional[str] = None,
                         ) -> Union[CompiledPlan, ShardedPlan]:
         """Plan + stacked index + shard_map jit for a query over ``mesh``.
 
@@ -244,6 +247,7 @@ class QueryEngine:
         spec = self._resolve_spec(
             spec, rep=rep, method=method,
             project=tuple(project) if project else None, narrow=narrow,
+            kernels=kernels,
             axes=tuple(axes) if axes is not None else None)
         crep = spec.rep or self.rep
         fp = query_fingerprint(query)
@@ -262,7 +266,7 @@ class QueryEngine:
             return self.compile(query, spec)
         key = sharded_executor_key(query, crep, spec.method, spec.project,
                                    mesh, sp.axes, self.db.version,
-                                   spec.narrow)
+                                   spec.narrow, spec.kernels)
         hit = self._plans.get(key)
         if hit is not None:
             self._plans.move_to_end(key)
@@ -402,6 +406,7 @@ class QueryEngine:
                        method: Optional[str] = None,
                        project: Optional[tuple] = None,
                        narrow: Optional[bool] = None,
+                       kernels: Optional[str] = None,
                        auto: bool = False, mesh=None,
                        axes: Optional[tuple] = None) -> JoinSample:
         """One independent Poisson sample of ``beta_y(Q)`` via the cached
@@ -417,6 +422,7 @@ class QueryEngine:
         spec = self._resolve_spec(
             spec, cap=cap, acap=acap, rep=rep, method=method,
             project=tuple(project) if project else None, narrow=narrow,
+            kernels=kernels,
             mesh=mesh, axes=tuple(axes) if axes is not None else None)
         if query.prob_var is None:
             raise ValueError("Poisson sampling needs query.prob_var (beta_y)")
@@ -445,7 +451,8 @@ class QueryEngine:
                      rep: Optional[str] = None,
                      method: Optional[str] = None,
                      project: Optional[tuple] = None,
-                     narrow: Optional[bool] = None, mesh=None,
+                     narrow: Optional[bool] = None,
+                     kernels: Optional[str] = None, mesh=None,
                      axes: Optional[tuple] = None) -> JoinSample:
         """``B`` independent Poisson draws of ``beta_y(Q)`` in one dispatch
         (DESIGN.md §10). ``keys`` is a ``(B,)`` PRNG key vector — pass
@@ -464,6 +471,7 @@ class QueryEngine:
         spec = self._resolve_spec(
             spec, cap=cap, acap=acap, rep=rep, method=method,
             project=tuple(project) if project else None, narrow=narrow,
+            kernels=kernels,
             mesh=mesh, axes=tuple(axes) if axes is not None else None)
         if query.prob_var is None:
             raise ValueError("Poisson sampling needs query.prob_var (beta_y)")

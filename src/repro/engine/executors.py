@@ -39,16 +39,26 @@ __all__ = [
 def _sample_jit(
     shred: Shred, w, p, prefE, key, cap: int, rep: str, method: str, n: int = 0,
     acap: int = 0, project=None, narrow: bool = False,
+    route: str = "pernode", dparams=None,
 ) -> JoinSample:
-    if method == "exprace":
+    if route in ("fused", "reference"):
+        # One-launch draw (kernels/fused_draw.py, DESIGN.md §14): positions
+        # AND per-node rows come out of a single kernel (or its traced-jnp
+        # reference twin); only the column gather remains outside.
+        node_rows, ps = probe.draw_fused(
+            shred, dparams, key, method=method, cap=cap, acap=acap, n=n,
+            reference=(route == "reference"))
+        cols = probe.gather_columns(shred, node_rows)
+    elif method == "exprace":
         ps = sampling.exprace_positions(key, w, p, prefE, cap,
                                         arrival_cap=acap, narrow=narrow)
     elif method == "ptbern_flat":  # n is the static, concrete join size
         ps = sampling.pt_bern_flat_positions(key, p, prefE, n, cap)
     else:
         raise ValueError(f"unknown jit sampling method {method!r}")
-    pos = jnp.minimum(ps.positions, jnp.maximum(prefE[-1] - 1, 0))  # clamp pads
-    cols = probe.get(shred, pos, rep=rep)
+    if route not in ("fused", "reference"):
+        pos = jnp.minimum(ps.positions, jnp.maximum(prefE[-1] - 1, 0))  # clamp
+        cols = probe.get(shred, pos, rep=rep)
     if project is not None:
         cols = {v: c for v, c in cols.items() if v in project}
     return JoinSample(cols, ps.positions, ps.count, ps.overflow)
@@ -57,22 +67,25 @@ def _sample_jit(
 def sample_executor(method: str, project: Optional[tuple]):
     """The jitted Poisson-sample executor with (method, project) baked in.
 
-    ``cap``/``rep``/``n``/``acap`` are static: each distinct combination is
-    one cached trace on the returned callable.
+    ``cap``/``rep``/``n``/``acap``/``route`` are static: each distinct
+    combination is one cached trace on the returned callable. ``dparams``
+    (the plan-bound fused-draw operand vectors) is a pytree operand —
+    ``None`` on the per-node route.
     """
     return jax.jit(
         partial(_sample_jit, method=method, project=project),
-        static_argnames=("cap", "rep", "n", "acap", "narrow"),
+        static_argnames=("cap", "rep", "n", "acap", "narrow", "route"),
     )
 
 
 def _batched_sample_jit(
     shred: Shred, w, p, prefE, keys, cap: int, rep: str, method: str,
     n: int = 0, acap: int = 0, project=None, narrow: bool = False,
+    route: str = "pernode", dparams=None,
 ) -> JoinSample:
     one = partial(_sample_jit, shred, w, p, prefE, cap=cap, rep=rep,
                   method=method, n=n, acap=acap, project=project,
-                  narrow=narrow)
+                  narrow=narrow, route=route, dparams=dparams)
     return jax.vmap(one)(keys)
 
 
@@ -82,10 +95,13 @@ def batched_sample_executor(method: str, project: Optional[tuple]):
 
     Statics are identical to ``sample_executor``; the batch size enters only
     through ``keys.shape[0]``, so each key-bucket size is one cached trace.
+    Only ``keys`` is vmapped — the index, parameter vectors, and fused-draw
+    operands are closed over and broadcast, so the fused route batches as a
+    vmapped single-kernel launch.
     """
     return jax.jit(
         partial(_batched_sample_jit, method=method, project=project),
-        static_argnames=("cap", "rep", "n", "acap", "narrow"),
+        static_argnames=("cap", "rep", "n", "acap", "narrow", "route"),
     )
 
 

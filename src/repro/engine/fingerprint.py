@@ -69,15 +69,16 @@ def plan_key(query: JoinQuery, rep: str, version: int = 0) -> Tuple[str, str, in
 def executor_key(
     query: JoinQuery, rep: str, method: str,
     project: Optional[Tuple[str, ...]], version: int = 0,
-    narrow: Optional[bool] = None,
+    narrow: Optional[bool] = None, kernels: str = "auto",
 ) -> Tuple:
     """Cache key of a compiled plan: the shred key plus everything baked
     statically into the jitted executor. ``narrow`` is the DrawSpec's
-    int32-narrowing override (None = auto) — it changes the traced
-    executors, so it is plan identity like rep/method/project. The bound
-    snapshot version stays the LAST element (``apply_delta`` re-keys
-    entries by slicing it off)."""
-    return (query_fingerprint(query), rep, method, project, narrow, version)
+    int32-narrowing override (None = auto) and ``kernels`` its draw-kernel
+    route request — both change the traced executors, so they are plan
+    identity like rep/method/project. The bound snapshot version stays the
+    LAST element (``apply_delta`` re-keys entries by slicing it off)."""
+    return (query_fingerprint(query), rep, method, project, narrow, kernels,
+            version)
 
 
 def mesh_fingerprint(mesh) -> Tuple[Tuple[str, int], ...]:
@@ -103,12 +104,13 @@ def sharded_plan_key(query: JoinQuery, rep: str, mesh,
 def sharded_executor_key(
     query: JoinQuery, rep: str, method: str,
     project: Optional[Tuple[str, ...]], mesh, axes: Tuple[str, ...],
-    version: int = 0, narrow: Optional[bool] = None,
+    version: int = 0, narrow: Optional[bool] = None, kernels: str = "auto",
 ) -> Tuple:
     """Cache key of a sharded compiled plan: everything static in the
     shard_map executors, including the partition axes and the DrawSpec's
-    narrowing override (version last, as in ``executor_key``)."""
-    return (query_fingerprint(query), rep, method, project, narrow,
+    narrowing and kernel-route overrides (version last, as in
+    ``executor_key``)."""
+    return (query_fingerprint(query), rep, method, project, narrow, kernels,
             mesh_fingerprint(mesh), tuple(axes), version)
 
 
@@ -117,7 +119,7 @@ def draw_fingerprint(spec) -> Tuple:
     mesh-identity-free (the mesh contributes its shape via
     ``mesh_fingerprint``, matching the philosophy of the other keys).
     Used by callers keying draw configurations across engines."""
-    return (spec.rep, spec.method, spec.project, spec.narrow,
+    return (spec.rep, spec.method, spec.project, spec.narrow, spec.kernels,
             spec.cap, spec.acap,
             mesh_fingerprint(spec.mesh) if spec.mesh is not None else None,
             spec.axes)

@@ -15,7 +15,7 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import estimate, probe
+from repro.core import estimate, probe, sampling
 from repro.core.jointree import JoinQuery
 from repro.core.poisson import JoinSample
 from repro.core.shred import Shred
@@ -128,8 +128,21 @@ class CompiledPlan:
                                     self.policy.sample_capacity(self.w, self.p))
             self._arrival_cap = max(self._arrival_cap or 0,
                                     self.policy.arrival_capacity(self.w, self.p))
+            # Draw-kernel route (probe.select_draw, DESIGN.md §14), decided
+            # once per bind like rep/narrow: the one-launch fused draw needs
+            # its plan-bound operand vectors (eager — concrete arrays) and a
+            # capable shred; recomputed on rebind because a delta can gain
+            # or lose the packed arena.
+            dparams = sampling.fused_draw_params(self.w, self.p, self.prefE)
+            self._route = probe.select_draw(
+                shred, dparams, method=self.method,
+                n=self._join_size if self.method == "ptbern_flat" else 0,
+                kernels=self.spec.kernels)
+            self._dparams = dparams if self._route != "pernode" else None
         else:
             self.p = None
+            self._route = "pernode"
+            self._dparams = None
 
     def rebind_shred(self, shred: Shred) -> "CompiledPlan":
         """Swap in an (incrementally upgraded) index for a newer snapshot,
@@ -177,9 +190,15 @@ class CompiledPlan:
             return executors.empty_sample(self.shred, cap)
         acap = acap or (self.arrival_capacity() if self.method == "exprace" else 0)
         n = self.join_size if self.method == "ptbern_flat" else 0
+        # An explicit per-call rep pins the multi-launch per-node path: the
+        # fused route has no rep (its kernel walks the packed arena) and
+        # draws from its own stream, so honoring the rep request means
+        # honoring the per-node sampler with it.
+        route = "pernode" if rep else self._route
         return self._jit(self.shred, self.w, self.p, self.prefE, key, cap=cap,
                          rep=rep or self.rep_default, n=n, acap=acap,
-                         narrow=self._narrow)
+                         narrow=self._narrow, route=route,
+                         dparams=self._dparams if route != "pernode" else None)
 
     def sample_batch(self, keys, cap: Optional[int] = None,
                      rep: Optional[str] = None,
@@ -205,9 +224,12 @@ class CompiledPlan:
         acap = acap or (self.arrival_capacity() if self.method == "exprace" else 0)
         n = self.join_size if self.method == "ptbern_flat" else 0
         kpad, _ = executors.pad_batch_keys(keys)
+        route = "pernode" if rep else self._route  # explicit rep pins pernode
         smp = self._batched_jit(self.shred, self.w, self.p, self.prefE, kpad,
                                 cap=cap, rep=rep or self.rep_default, n=n,
-                                acap=acap, narrow=self._narrow)
+                                acap=acap, narrow=self._narrow, route=route,
+                                dparams=(self._dparams
+                                         if route != "pernode" else None))
         if int(kpad.shape[0]) != batch:
             smp = jax.tree.map(lambda x: x[:batch], smp)
         return smp

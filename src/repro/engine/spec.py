@@ -31,6 +31,7 @@ __all__ = ["DrawSpec", "merge_spec"]
 
 _REPS = (None, "csr", "usr", "both")
 _METHODS = ("exprace", "ptbern_flat")
+_KERNELS = ("auto", "fused", "pernode", "reference")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,6 +51,13 @@ class DrawSpec:
     narrow   int32-narrowed sampler searches: None = auto (on iff the index
              packed an int32 arena and the backend prefers Pallas), True =
              force on (requires a packed index), False = force off.
+    kernels  draw-kernel route (DESIGN.md §14): ``auto`` = the one-launch
+             fused draw iff capable and the active ``KernelPolicy`` prefers
+             it, else the multi-launch per-node path; ``fused`` = require
+             the fused kernel (raises at bind if unavailable);
+             ``reference`` = the fused pipeline as plain traced jnp (the
+             bit-identity oracle); ``pernode`` = always the F64
+             multi-launch path (the precision arbiter).
     mesh     device mesh: route through the sharded plan (DESIGN.md §8).
     axes     mesh axes to partition the root over (None = shard planner).
     """
@@ -60,6 +68,7 @@ class DrawSpec:
     cap: Optional[int] = None
     acap: Optional[int] = None
     narrow: Optional[bool] = None
+    kernels: str = "auto"
     mesh: Optional[object] = None
     axes: Optional[Tuple[str, ...]] = None
 
@@ -74,6 +83,9 @@ class DrawSpec:
         if self.method not in _METHODS:
             raise ValueError(
                 f"method must be one of {_METHODS}, got {self.method!r}")
+        if self.kernels not in _KERNELS:
+            raise ValueError(
+                f"kernels must be one of {_KERNELS}, got {self.kernels!r}")
 
     # -- derived views -------------------------------------------------------
     def plan_view(self, rep: str) -> "DrawSpec":
@@ -82,7 +94,7 @@ class DrawSpec:
         built with. Runtime fields (cap/acap) and routing fields
         (mesh/axes) are stripped — they never define plan identity."""
         return DrawSpec(rep=rep, method=self.method, project=self.project,
-                        narrow=self.narrow)
+                        narrow=self.narrow, kernels=self.kernels)
 
     def with_overrides(self, **kw) -> "DrawSpec":
         """``dataclasses.replace`` restricted to non-None overrides —

@@ -6,23 +6,28 @@ and the documented fallbacks:
     TPU has no native 64-bit gathers (DESIGN.md §9);
   * prefix tables too large for VMEM fall back likewise.
 
-Interpret mode is resolved *at call time*: every wrapper takes an
-``interpret=`` override (tests flip it per-case), defaulting to the
-``REPRO_PALLAS_INTERPRET`` env var (interpret mode in this CPU container;
-on real TPUs the var flips kernels to compiled mode). Setting
-``REPRO_PALLAS_DISABLE=1`` routes every wrapper through its pure-XLA/jnp
-fallback (the searchsorted/cumsum fallbacks for the index kernels, the
-``ref`` oracles for GEO and attention) — the operator escape hatch for a
-kernel bug, exercised per-case by the tests (``TestOpsDispatch``).
+Kernel selection is resolved *at call time* from the active
+``repro.config.KernelPolicy`` (DESIGN.md §14): every wrapper takes an
+``interpret=`` override (tests flip it per-case) and a ``policy=``
+override, defaulting to ``config.current_policy()`` — which is the
+``override(...)`` context if one is installed, else the policy parsed from
+the ``REPRO_PALLAS_*`` environment variables (interpret mode in this CPU
+container; compiled mode on real TPUs). A disabled policy
+(``KernelPolicy(enabled=False)``, historically ``REPRO_PALLAS_DISABLE=1``)
+routes every wrapper through its pure-XLA/jnp fallback (the
+searchsorted/cumsum fallbacks for the index kernels, the ``ref`` oracles
+for GEO and attention) — the operator escape hatch for a kernel bug,
+exercised per-case by the tests (``TestOpsDispatch``).
 """
 from __future__ import annotations
 
 import math  # noqa: F401  (re-exported convenience; hoisted per style rule)
-import os
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro import config
 
 from . import ref as _ref
 from .bsearch_probe import bsearch_probe as _bsearch_tiles
@@ -32,43 +37,44 @@ from .flash_decode import flash_decode as _flash_decode
 from .flash_prefill import flash_prefill as _flash_prefill
 
 # int32 table entries kept fully VMEM-resident (bsearch prefix tables and
-# the fused-GET arena share this budget — core/probe.py imports it).
-VMEM_PREF_LIMIT = 1 << 21
+# the fused-GET arena share this budget — core/probe.py reads the active
+# policy's ``vmem_limit``; this constant is the policy default).
+VMEM_PREF_LIMIT = config.DEFAULT_VMEM_LIMIT
 _VMEM_PREF_LIMIT = VMEM_PREF_LIMIT  # back-compat alias
 
 
-def interpret_default() -> bool:
-    """Interpret-mode default, read from the environment at call time (so
-    tests and CI legs can flip it without re-importing the module)."""
-    return os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+def interpret_default(policy: Optional[config.KernelPolicy] = None) -> bool:
+    """Interpret-mode default, resolved from the active ``KernelPolicy``
+    at call time (so tests and CI legs can flip the env var or install an
+    ``override(...)`` without re-importing the module)."""
+    return config.current_policy(policy).interpret
 
 
-def pallas_enabled() -> bool:
-    """False when ``REPRO_PALLAS_DISABLE=1``: every wrapper (and the fused
-    GET dispatch in core/probe.py) uses its pure-XLA fallback instead."""
-    return os.environ.get("REPRO_PALLAS_DISABLE", "0") in ("", "0")
+def pallas_enabled(policy: Optional[config.KernelPolicy] = None) -> bool:
+    """False when the active policy disables kernels (historically
+    ``REPRO_PALLAS_DISABLE=1``): every wrapper (and the fused dispatches
+    in core/probe.py) uses its pure-XLA fallback instead."""
+    return config.current_policy(policy).enabled
 
 
-def pallas_preferred() -> bool:
+def pallas_preferred(policy: Optional[config.KernelPolicy] = None) -> bool:
     """Should jitted hot paths *prefer* Pallas kernels over their XLA
     twins when both are available? True in compiled mode (real TPU — the
     kernels are the point); in interpret mode (this CPU container) the
     interpreter's per-access overhead loses to XLA inside an already-jitted
-    executor, so hot paths default to XLA unless ``REPRO_PALLAS_PREFER=1``
-    pins the kernel path (the CI matrix leg does, so the interpret-mode
-    kernels are exercised by the whole tier-1 suite, not only by the
-    explicit-rep tests). Capability gates (``pallas_enabled``, dtype/VMEM
-    fallbacks) still apply on top; explicit ``rep='usr_fused'`` requests
-    bypass this preference. Resolved at trace time."""
-    if not pallas_enabled():
-        return False
-    if os.environ.get("REPRO_PALLAS_PREFER", "0") not in ("", "0"):
-        return True
-    return not interpret_default()  # compiled mode: kernels win
+    executor, so hot paths default to XLA unless the policy's ``prefer``
+    pins the kernel path (the CI matrix leg sets ``REPRO_PALLAS_PREFER=1``,
+    so the interpret-mode kernels are exercised by the whole tier-1 suite,
+    not only by the explicit-rep tests). Capability gates
+    (``pallas_enabled``, dtype/VMEM fallbacks) still apply on top; explicit
+    ``rep='usr_fused'`` / ``kernels='fused'`` requests bypass this
+    preference. Resolved at trace time (``KernelPolicy.preferred``)."""
+    return config.current_policy(policy).preferred
 
 
-def _interpret(override: Optional[bool]) -> bool:
-    return interpret_default() if override is None else override
+def _interpret(override: Optional[bool],
+               policy: Optional[config.KernelPolicy] = None) -> bool:
+    return interpret_default(policy) if override is None else override
 
 
 def to_tiles(x: jnp.ndarray, fill=0) -> jnp.ndarray:
@@ -80,7 +86,9 @@ def to_tiles(x: jnp.ndarray, fill=0) -> jnp.ndarray:
 
 
 def searchsorted_prefix(pref: jnp.ndarray, q: jnp.ndarray,
-                        *, interpret: Optional[bool] = None) -> jnp.ndarray:
+                        *, interpret: Optional[bool] = None,
+                        policy: Optional[config.KernelPolicy] = None,
+                        ) -> jnp.ndarray:
     """Bulk 'locate offset in prefix vector': max j with pref[j] <= q
     (== ``searchsorted(pref, q, 'right') - 1`` clamped at 0).
 
@@ -89,37 +97,43 @@ def searchsorted_prefix(pref: jnp.ndarray, q: jnp.ndarray,
     vectors) or oversized table — "where dtypes permit" (DESIGN.md §9).
     """
     n = q.shape[0]
+    pol = config.current_policy(policy)
     if (pref.dtype != jnp.int32 or q.dtype != jnp.int32
-            or pref.shape[0] > _VMEM_PREF_LIMIT or not pallas_enabled()):
+            or pref.shape[0] > pol.vmem_limit or not pallas_enabled(pol)):
         return jnp.maximum(jnp.searchsorted(pref, q, side="right") - 1, 0)
     tiles = to_tiles(q)
-    out = _bsearch_tiles(pref, tiles, interpret=_interpret(interpret))
+    out = _bsearch_tiles(pref, tiles, interpret=_interpret(interpret, pol))
     return out.reshape(-1)[:n]
 
 
 def prefix_sum(x: jnp.ndarray, exclusive: bool = False,
-               *, interpret: Optional[bool] = None) -> jnp.ndarray:
+               *, interpret: Optional[bool] = None,
+               policy: Optional[config.KernelPolicy] = None) -> jnp.ndarray:
     """Prefix sum of a 1-D vector (the index's pref column)."""
     n = x.shape[0]
-    if x.dtype == jnp.int64 or not pallas_enabled():
+    pol = config.current_policy(policy)
+    if x.dtype == jnp.int64 or not pallas_enabled(pol):
         s = jnp.cumsum(x)
     else:
         s = _prefix_tiles(to_tiles(x),
-                          interpret=_interpret(interpret)).reshape(-1)[:n]
+                          interpret=_interpret(interpret, pol)).reshape(-1)[:n]
     if exclusive:
         s = jnp.concatenate([jnp.zeros((1,), s.dtype), s[:-1]])
     return s
 
 
 def geo_positions_fused(u: jnp.ndarray, p,
-                        *, interpret: Optional[bool] = None) -> jnp.ndarray:
+                        *, interpret: Optional[bool] = None,
+                        policy: Optional[config.KernelPolicy] = None,
+                        ) -> jnp.ndarray:
     """Fused uniform->geometric->positions transform (ascending int32)."""
     n = u.shape[0]
-    if not pallas_enabled():
+    pol = config.current_policy(policy)
+    if not pallas_enabled(pol):
         return _ref.geo_gaps_ref(u.astype(jnp.float32), p)
     tiles = to_tiles(u.astype(jnp.float32), 1.0 - 1e-7)
     return _geo_tiles(tiles, p,
-                      interpret=_interpret(interpret)).reshape(-1)[:n]
+                      interpret=_interpret(interpret, pol)).reshape(-1)[:n]
 
 
 def decode_attention(q, k, v, bias=None, *, block_s: int = 512,

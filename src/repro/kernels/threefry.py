@@ -1,0 +1,84 @@
+"""Threefry-2x32 counter PRNG, pure jnp — usable *inside* Pallas kernels.
+
+The fused one-launch draw (kernels/fused_draw.py, DESIGN.md §14) needs its
+randomness generated in-kernel: routing through ``jax.random`` would put
+the uniform generation back into separate XLA dispatches, re-creating the
+launch ladder the kernel exists to kill. This module is a self-contained
+Threefry-2x32 implementation (the same 20-round ARX cipher family JAX's
+default PRNG uses) built only from uint32 elementwise ops, so the *same*
+function runs inside a kernel body and in the pure-jnp reference path —
+which is what makes the fused draw bit-identical to its multi-launch
+reference by construction.
+
+The stream is **self-defined**: ``fold``/``uniforms`` do not reproduce
+``jax.random.fold_in``/``jax.random.uniform`` bit-for-bit (those interpose
+key typing and different counter layouts). Samplers built on this module
+therefore draw from their own named stream — the same situation as
+``kernels/geo_gaps`` vs the F64 ``sampling.geo_positions`` — and are
+validated distributionally plus against their shared-core reference.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["threefry2x32", "fold", "uniforms", "bits_to_uniform"]
+
+U32 = jnp.uint32
+# Threefry-2x32 rotation schedule (Salmon et al. 2011, Table 2): 20 rounds
+# as 5 groups of 4, alternating these two rotation quads.
+_ROT_A = (13, 15, 26, 6)
+_ROT_B = (17, 29, 16, 24)
+_PARITY = 0x1BD11BDA  # key-schedule parity constant (SkeinKsParity low word)
+
+
+def _rotl(x, d: int):
+    return (x << U32(d)) | (x >> U32(32 - d))
+
+
+def threefry2x32(key, x0, x1):
+    """The 20-round Threefry-2x32 block cipher.
+
+    key: (2,) uint32; x0/x1: broadcast-compatible uint32 counters.
+    Returns the two output words. Elementwise uint32 adds/xors/rotates
+    only — safe inside Pallas kernel bodies and under vmap.
+    """
+    k0 = key[0]
+    k1 = key[1]
+    ks = (k0, k1, k0 ^ k1 ^ U32(_PARITY))
+    x0 = x0 + k0
+    x1 = x1 + k1
+    for group, rot in enumerate((_ROT_A, _ROT_B, _ROT_A, _ROT_B, _ROT_A)):
+        for d in rot:
+            x0 = x0 + x1
+            x1 = _rotl(x1, d) ^ x0
+        # Key injection after each 4-round group, with the round-counter
+        # increment that breaks the cipher's shift symmetry.
+        x0 = x0 + ks[(group + 1) % 3]
+        x1 = x1 + ks[(group + 2) % 3] + U32(group + 1)
+    return x0, x1
+
+
+def fold(key, data) -> jnp.ndarray:
+    """Derive a (2,) uint32 subkey by encrypting the stream id under the
+    parent key — the in-kernel analogue of folding a stream into a key."""
+    d = jnp.asarray(data, U32)
+    x0, x1 = threefry2x32(key, d, U32(0))
+    return jnp.stack([x0, x1])
+
+
+def bits_to_uniform(bits) -> jnp.ndarray:
+    """uint32 -> float32 uniform in [0, 1): keep the top 23 bits as the
+    mantissa of a float in [1, 2), subtract 1 (the standard bit trick —
+    exactly representable, no rounding)."""
+    mant = (bits >> U32(9)) | U32(0x3F800000)
+    return jax.lax.bitcast_convert_type(mant, jnp.float32) - jnp.float32(1.0)
+
+
+def uniforms(key, n: int, stream: int = 0) -> jnp.ndarray:
+    """``n`` float32 uniforms in [0, 1) from counter lanes 0..n-1 of the
+    given stream. One cipher call over the whole lane vector."""
+    sub = fold(key, stream)
+    ctr = jnp.arange(n, dtype=U32)
+    x0, _ = threefry2x32(sub, ctr, jnp.zeros((n,), U32))
+    return bits_to_uniform(x0)

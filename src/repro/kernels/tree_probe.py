@@ -49,14 +49,21 @@ def _descend(arena, off: int, length: int, q):
     return p
 
 
-def _kernel(arena_ref, q_ref, out_ref, *, layout):
-    arena = arena_ref[...]
-    pos = q_ref[...]
+def tree_walk(arena, pos, layout):
+    """The full pre-order USR walk as pure (shape-agnostic) jnp: int32
+    probe positions -> per-slot row indices, slot order = ``layout.names``.
+
+    Factored out of the kernel body so the fused one-launch draw
+    (kernels/fused_draw.py, DESIGN.md §14) runs the *same* walk on its
+    in-kernel sampled positions — one shared implementation is what keeps
+    the fused GET and the fused draw's probe phase bit-identical. Only
+    elementwise ops and VMEM gathers (``jnp.take``): safe inside Pallas
+    kernel bodies (any ``pos`` shape) and in plain traced code.
+    """
     # Root locate: pos -> (root row j, local offset) — paper Fig. 4 line 3.
     j = _descend(arena, 0, layout.root_len, pos)
     j = jnp.minimum(j, layout.n_root - 1)
     local = pos - jnp.take(arena, j)
-    out_ref[0, :, :] = j
     rows = {0: j}
     locs = {0: local}
     # Pre-order walk, unrolled: edges are emitted in the exact recursion
@@ -74,9 +81,15 @@ def _kernel(arena_ref, q_ref, out_ref, *, layout):
         jj = jnp.minimum(jj, e.n_child - 1)
         clocal = target - jnp.take(arena, e.ce_off + jj)
         crow = jnp.take(arena, e.perm_off + jj)
-        out_ref[e.slot, :, :] = crow
         rows[e.slot] = crow
         locs[e.slot] = clocal
+    return [rows[s] for s in range(len(rows))]
+
+
+def _kernel(arena_ref, q_ref, out_ref, *, layout):
+    rows = tree_walk(arena_ref[...], q_ref[...], layout)
+    for s, r in enumerate(rows):
+        out_ref[s, :, :] = r
 
 
 @functools.partial(jax.jit,

@@ -36,24 +36,12 @@ def make_host_mesh(model: int = 1):
 
 def force_host_devices(n: int) -> int:
     """Ask XLA for ``n`` virtual host (CPU) devices; returns the count
-    actually available. Only effective before the backend initializes —
-    appends ``--xla_force_host_platform_device_count`` to ``XLA_FLAGS``
-    and reports (rather than raises) when the backend beat us to it, so
-    callers degrade to the real device count."""
-    import os
-    import sys
+    actually available. Platform/env setup is centralized in
+    ``repro.config`` (DESIGN.md §14) — this re-export keeps the historical
+    launch-layer call sites working."""
+    from repro import config
 
-    if n > 1:
-        flags = os.environ.get("XLA_FLAGS", "")
-        flag = f"--xla_force_host_platform_device_count={n}"
-        if "--xla_force_host_platform_device_count" not in flags:
-            os.environ["XLA_FLAGS"] = f"{flags} {flag}".strip()
-    got = len(jax.devices())
-    if got < n:
-        print(f"[mesh] requested {n} host devices, backend has {got} "
-              f"(already initialized, or XLA_FLAGS pre-set); using {got}",
-              file=sys.stderr)
-    return got
+    return config.force_host_devices(n)
 
 
 def batch_axes(mesh) -> tuple:

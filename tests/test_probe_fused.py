@@ -21,6 +21,7 @@ from repro.core import (
     Atom, Database, DeltaBatch, JoinQuery, build_shred, get, pack_arena,
     reshred_incremental, usr_get_rows, usr_get_rows_fused,
 )
+from repro import config
 from repro.core import probe
 from repro.engine import QueryEngine
 
@@ -128,15 +129,15 @@ class TestFallbackLadder:
         q = JoinQuery((Atom.of("R", "x", "y"), Atom.of("S", "y", "z")))
         return build_shred(db, q, rep="usr")
 
-    def test_vmem_budget_falls_back(self, monkeypatch):
+    def test_vmem_budget_falls_back(self):
         shred = self._shred()
         assert probe.fused_available(shred)
-        monkeypatch.setattr(probe, "FUSED_VMEM_LIMIT", 1)
-        assert not probe.fused_available(shred)
-        n = int(shred.join_size)
-        pos = jnp.arange(n, dtype=jnp.int64)
-        a = usr_get_rows(shred, pos)
-        b = usr_get_rows_fused(shred, pos)  # silently takes the per-node path
+        with config.override(config.KernelPolicy(vmem_limit=1)):
+            assert not probe.fused_available(shred)
+            n = int(shred.join_size)
+            pos = jnp.arange(n, dtype=jnp.int64)
+            a = usr_get_rows(shred, pos)
+            b = usr_get_rows_fused(shred, pos)  # silently takes per-node path
         for k in a:
             np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
 
@@ -194,7 +195,10 @@ class TestEngineIntegration:
     def test_fused_is_default_and_bit_identical(self):
         db, q = self._db_q()
         eng = QueryEngine(db)
-        plan = eng.compile(q)
+        # Pin the multi-launch sampler: this test compares the fused GET
+        # *rep* against per-node USR under one position stream (the fused
+        # one-launch *draw* has its own stream — tests/test_fused_draw.py).
+        plan = eng.compile(q, kernels="pernode")
         assert plan.rep_default == "usr_fused"
         key = jax.random.key(3)
         sf = plan.sample(key)
@@ -234,19 +238,22 @@ class TestEngineIntegration:
     def test_apply_delta_keeps_fused_coherent(self):
         db, q = self._db_q()
         eng = QueryEngine(db)
-        plan = eng.compile(q)
+        # kernels="pernode" keeps one position stream across the rep
+        # comparison below (the fused *draw* has its own stream and its
+        # delta coherence is covered by tests/test_fused_draw.py).
+        plan = eng.compile(q, kernels="pernode")
         key = jax.random.key(5)
         plan.sample(key)  # warm
         eng.apply_delta(DeltaBatch.of(
             S={"insert": {"y": [1, 2], "z": [3, 0]}}))
-        plan2 = eng.compile(q)
+        plan2 = eng.compile(q, kernels="pernode")
         assert plan2.rep_default == "usr_fused"
         sf = plan2.sample(key)
         su = plan2.sample(key, rep="usr")
         np.testing.assert_array_equal(np.asarray(sf.positions),
                                       np.asarray(su.positions))
         # coherence vs a cold engine on the post-delta snapshot
-        cold = QueryEngine(eng.db).compile(q)
+        cold = QueryEngine(eng.db).compile(q, kernels="pernode")
         sc = cold.sample(key)
         np.testing.assert_array_equal(np.asarray(sf.positions),
                                       np.asarray(sc.positions))

@@ -246,8 +246,13 @@ SCRIPT = textwrap.dedent("""
     part = partition_root(semijoin_filter(db, q), q, 8)
     ref = []
     for s, sdb in enumerate(part.shards):
+        # kernels="pernode": the sharded executors always run the per-node
+        # route, so the per-shard reference must too — under a Pallas-
+        # preferring policy a plain engine would auto-route to the fused
+        # draw, whose stream is its own (DESIGN.md section 14).
         r = QueryEngine(sdb).sample(q, jax.random.fold_in(key, s),
-                                    cap=plan.cap, acap=plan.acap)
+                                    cap=plan.cap, acap=plan.acap,
+                                    kernels="pernode")
         c = int(r.count)
         ref += list(zip(*[np.asarray(r.columns[v])[:c] for v in keys]))
     assert got == sorted(ref), (len(got), len(ref))

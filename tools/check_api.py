@@ -34,7 +34,7 @@ ROOT = Path(__file__).resolve().parents[1]
 if str(ROOT / "src") not in sys.path:  # usable without PYTHONPATH=src
     sys.path.insert(0, str(ROOT / "src"))
 
-MODULES = ("repro.engine", "repro.data", "repro.core")
+MODULES = ("repro.engine", "repro.data", "repro.core", "repro.config")
 DEFAULT_BASELINE = ROOT / "API.md"
 EXIT_DRIFT = 1
 EXIT_MISSING_BASELINE = 3  # no snapshot committed at all

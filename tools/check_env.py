@@ -1,0 +1,64 @@
+#!/usr/bin/env python
+"""Lint: no raw ``REPRO_*`` environment reads outside ``repro/config.py``.
+
+The ``KernelPolicy`` consolidation (DESIGN.md §14) made
+``src/repro/config.py`` the single module allowed to read the engine's
+``REPRO_*`` environment variables — everywhere else resolves behavior
+through ``config.current_policy()`` / ``config.bench_tiny()``, so an
+``override(...)`` context or a per-call ``policy=`` can never be bypassed
+by a stray env read. This lint keeps it that way: any line outside
+config.py where ``os.environ``/``os.getenv`` co-occurs with a ``REPRO_``
+variable name fails the build.
+
+Setting (``monkeypatch.setenv``, ``os.environ["REPRO_..."] = ...`` in
+tests/CI) is fine — only *reads* route through config; but rather than
+parse access direction, the lint flags any same-line co-occurrence and
+tests use ``config.override(...)`` or env-set helpers instead.
+
+Usage:  python tools/check_env.py [repo_root]
+Exit 1 and list offending lines on violation.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+_SCAN_DIRS = ("src", "benchmarks", "examples", "tests", "tools")
+_ALLOWED = ("src/repro/config.py", "tools/check_env.py")
+_READ = re.compile(r"os\.(?:environ|getenv)")
+_VAR = re.compile(r"REPRO_[A-Z_]*")
+
+
+def violations(root: Path):
+    out = []
+    for d in _SCAN_DIRS:
+        base = root / d
+        if not base.is_dir():
+            continue
+        for path in sorted(base.rglob("*.py")):
+            rel = path.relative_to(root).as_posix()
+            if rel in _ALLOWED:
+                continue
+            for i, line in enumerate(
+                    path.read_text().splitlines(), start=1):
+                if _READ.search(line) and _VAR.search(line):
+                    out.append((rel, i, line.strip()))
+    return out
+
+
+def main(root: str = ".") -> int:
+    bad = violations(Path(root).resolve())
+    if bad:
+        print("check_env: raw REPRO_* env reads outside repro/config.py "
+              "(route through config.current_policy / bench_tiny):",
+              file=sys.stderr)
+        for rel, i, line in bad:
+            print(f"  {rel}:{i}: {line}", file=sys.stderr)
+        return 1
+    print("check_env: no raw REPRO_* env reads outside config.py ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1] if len(sys.argv) > 1 else "."))
