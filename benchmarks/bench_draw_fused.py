@@ -20,9 +20,12 @@ Three regimes over the STATS-like chain:
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
+from repro import config
 from repro.core import build_shred, probe, sampling
 from repro.engine import QueryEngine
 
@@ -70,6 +73,26 @@ def run(out):
     out(row("probe/draw-eager-pernode/1", us_p_e, f"|Q|={n};cap={cap}"))
     out(row("probe/draw-eager-fused/1", us_f_e,
             f"pernode/fused={us_p_e / us_f_e:.2f}x"))
+
+    # -- dispatch-bound, paged regime (DESIGN.md §15): the same draw with
+    # the index rebuilt one word over the VMEM budget, so the walk streams
+    # pages (sample launch + paged probe). Gated individually (gate_rows):
+    # losing the paged rung means falling back to the multi-launch
+    # per-node ladder and this row regressing toward draw-eager-pernode.
+    size = shred.packed.layout.size
+    pol = dataclasses.replace(config.current_policy(), vmem_limit=size - 1)
+    with config.override(pol):
+        shred_pg = build_shred(db, q, rep="both")
+        assert shred_pg.paged is not None, "workload must land in the paged regime"
+
+        def eager_paged():
+            rows, ps = probe.draw_paged(shred_pg, dparams, key,
+                                        method="exprace", cap=cap, acap=acap)
+            return probe.gather_columns(shred_pg, rows), ps
+
+        us_g_e = time_fn(lambda: jax.block_until_ready(eager_paged()))
+    out(row("probe/draw-eager-paged/1", us_g_e,
+            f"pernode/paged={us_p_e / us_g_e:.2f}x"))
 
     # -- warm jitted plan: single draw --------------------------------------
     us_p_j = time_fn(lambda: plan_p.sample(key))

@@ -20,11 +20,15 @@ tools/check_bench.py.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 
+from repro import config
 from repro.core import build_shred, get
-from repro.core.probe import usr_get_rows, usr_get_rows_fused
+from repro.core.probe import (usr_get_rows, usr_get_rows_fused,
+                              usr_get_rows_paged)
 
 from .timing import row, time_fn, tiny
 from .workloads import stats_like
@@ -61,6 +65,22 @@ def run(out):
             f"|Q|={n};depth={depth}"))
     out(row(f"probe/eager-fused/k={k_d}", us_fus_e,
             f"usr/fused={us_usr_e / us_fus_e:.2f}x"))
+
+    # -- dispatch-bound, paged regime (DESIGN.md §15): the same workload
+    # rebuilt under a VMEM budget one word short of the arena, so the index
+    # pages instead of packing a monolith. Gated individually (gate_rows):
+    # a regression that drops the paged rung back to the per-node walk
+    # shows up as this row converging on eager-usr, not the healthy median.
+    size = shred.packed.layout.size
+    pol = dataclasses.replace(config.current_policy(), vmem_limit=size - 1)
+    with config.override(pol):
+        shred_pg = build_shred(db, q, rep="both")
+        assert shred_pg.paged is not None, "workload must land in the paged regime"
+        us_pag_e = time_fn(lambda: jax.block_until_ready(
+            usr_get_rows_paged(shred_pg, pos_d)))
+    out(row(f"probe/eager-paged/k={k_d}", us_pag_e,
+            f"usr/paged={us_usr_e / us_pag_e:.2f}x;"
+            f"pages={len(shred_pg.paged.pages)}"))
 
     # -- compute-bound: one jitted dispatch per GET -------------------------
     pos_c = pos_of(k_c)

@@ -11,6 +11,8 @@ import argparse
 import json
 from pathlib import Path
 
+from repro import config
+
 DRYRUN_DIR = Path(__file__).resolve().parents[1] / "experiments" / "dryrun"
 
 
@@ -27,12 +29,18 @@ def load(mesh: str = None):
 
 
 def fraction(r):
-    """Roofline fraction: useful model FLOP-time over the dominant term."""
+    """Roofline fraction: useful model FLOP-time over the dominant term.
+
+    Peak FLOP/s comes from ``config.PEAK_FLOPS`` keyed by the record's
+    ``backend`` field; records without one (every pre-§15 dry run) resolve
+    to the TPU row — the historical 197e12 constant — so their committed
+    ratios are unchanged."""
     if "roofline" not in r or "model_flops_per_device" not in r:
         return None
     dom = max(r["roofline"]["compute_s"], r["roofline"]["memory_s"],
               r["roofline"]["collective_s"])
-    t_model = r["model_flops_per_device"] / 197e12
+    t_model = r["model_flops_per_device"] / config.peak_flops(
+        r.get("backend", "tpu"))
     return t_model / dom if dom > 0 else None
 
 

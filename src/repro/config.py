@@ -42,14 +42,22 @@ import os
 
 __all__ = [
     "KernelPolicy", "policy_from_env", "current_policy", "override",
-    "DEFAULT_VMEM_LIMIT", "force_host_devices", "bench_tiny",
-    "set_bench_tiny",
+    "DEFAULT_VMEM_LIMIT", "PAGED_PACK_LIMIT", "force_host_devices",
+    "bench_tiny", "set_bench_tiny", "backend", "device_kind", "backend_key",
+    "PEAK_FLOPS", "peak_flops",
 ]
 
 # int32 elements kept fully VMEM-resident (bsearch prefix tables, the
 # fused-GET arena, and the fused-draw scratch share this budget — see
 # DESIGN.md §9; ``kernels/ops.py`` re-exports it as VMEM_PREF_LIMIT).
 DEFAULT_VMEM_LIMIT = 1 << 21
+
+# Ceiling on the *total* size of a paged index arena (int32 elements,
+# DESIGN.md §15): an arena bigger than the VMEM budget is still packed —
+# page-sliced and streamed through VMEM by the paged kernels — up to this
+# cap, past which the int32 copy stops paying for itself and the per-node
+# int64 path stands (a 2^25-element arena is 128 MiB of extra HBM).
+PAGED_PACK_LIMIT = 1 << 25
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,9 +74,21 @@ class KernelPolicy:
                 this so the whole tier-1 suite exercises the kernels).
     vmem_limit  int32-element budget for VMEM-resident tables (prefix
                 vectors, the packed index arena, fused-draw scratch).
+                Arenas above it no longer drop to the per-node path:
+                they run the *paged* rung (DESIGN.md §15) as long as
+                every page fits this budget.
     fused_draw  allow the one-launch fused draw route (kernels/fused_draw)
                 when capability gates pass; False pins the multi-launch
                 per-node path without touching GET kernel selection.
+    tuned       resolve kernel tile shapes through the committed
+                ``kernels/TUNE_TABLE.json`` (per backend + problem-size
+                bucket, DESIGN.md §15); False pins every kernel's builtin
+                default tile (the pre-autotuner behavior).
+    tile_overrides
+                per-kernel tile pins that win over the tuning table: a
+                tuple of ``(kernel_name, value)`` pairs (tuple-of-pairs —
+                not a dict — so the policy stays hashable), e.g.
+                ``(("tree_probe", 16), ("flash_prefill", (128, 256)))``.
     """
 
     enabled: bool = True
@@ -76,6 +96,8 @@ class KernelPolicy:
     prefer: bool = False
     vmem_limit: int = DEFAULT_VMEM_LIMIT
     fused_draw: bool = True
+    tuned: bool = True
+    tile_overrides: tuple = ()
 
     @property
     def preferred(self) -> bool:
@@ -87,6 +109,15 @@ class KernelPolicy:
         kernel path. Capability gates (``enabled``, dtype/VMEM fallbacks)
         still apply on top."""
         return self.enabled and (self.prefer or not self.interpret)
+
+    def tile_override(self, kernel: str):
+        """The pinned tile for ``kernel`` from ``tile_overrides``, or
+        ``None`` — the first (highest-precedence) rung of the tile
+        resolution ladder in ``kernels/autotune.tile_for``."""
+        for name, value in self.tile_overrides:
+            if name == kernel:
+                return value
+        return None
 
 
 def policy_from_env() -> KernelPolicy:
@@ -160,6 +191,63 @@ def force_host_devices(n: int) -> int:
               f"(already initialized, or XLA_FLAGS pre-set); using {got}",
               file=sys.stderr)
     return got
+
+
+# ---------------------------------------------------------------------------
+# Backend detection (DESIGN.md §15). Centralized here so every kernel-
+# selection seam (paged-probe DMA variant, tuning-table lookup, roofline
+# peaks) asks the same question the same way; jax is imported lazily so
+# stdlib-only tools (benchmarks/roofline.py aggregation) can import this
+# module without pulling the runtime in.
+# ---------------------------------------------------------------------------
+
+def backend() -> str:
+    """The active execution substrate: ``'tpu'`` | ``'gpu'`` | ``'cpu'``
+    (``jax.default_backend()``). The paged tree-probe picks its streaming
+    strategy off this (TPU: in-kernel double-buffered DMA; GPU/CPU: the
+    portable per-page launch path — no ``pltpu``-only primitives), and the
+    tuning table keys its entries off ``backend_key()``."""
+    import jax
+
+    return jax.default_backend()
+
+
+def device_kind() -> str:
+    """Normalized device-kind slug of device 0 (e.g. ``'tpu-v5e'``,
+    ``'nvidia-h100'``, ``'cpu'``) — the second half of ``backend_key()``,
+    so tuning entries distinguish device generations within a backend."""
+    import jax
+
+    kind = jax.devices()[0].device_kind
+    return "-".join(str(kind).lower().split())
+
+
+def backend_key() -> str:
+    """``'<backend>/<device-kind>'`` — the tuning-table entry key for this
+    process (DESIGN.md §15), e.g. ``'cpu/cpu'`` or ``'tpu/tpu-v5e'``."""
+    return f"{backend()}/{device_kind()}"
+
+
+# Peak dense-math FLOP/s per backend (bf16-class units), the denominator of
+# the roofline fraction (benchmarks/roofline.py). 197e12 is the documented
+# TPU default this repo has always modeled (v5e-class bf16); the GPU and
+# CPU rows are representative single-device figures (A100-class bf16
+# tensor-core peak; a ~32-core AVX-512 host), good for bottleneck
+# *classification*, not for absolute MFU claims.
+PEAK_FLOPS = {
+    "tpu": 197e12,
+    "gpu": 312e12,
+    "cpu": 2e12,
+}
+
+
+def peak_flops(backend_name: str = None) -> float:
+    """Peak FLOP/s for ``backend_name`` (default: the detected backend).
+    Unknown names fall back to the TPU row — the historical constant, so
+    pre-existing dry-run records keep their ratios."""
+    if backend_name is None:
+        backend_name = backend()
+    return PEAK_FLOPS.get(backend_name, PEAK_FLOPS["tpu"])
 
 
 # ---------------------------------------------------------------------------

@@ -31,9 +31,10 @@ from .database import Database  # noqa: E402
 from .delta import DeltaBatch, RelationDelta  # noqa: E402
 from .jointree import Atom, JoinQuery, gyo_join_tree, is_acyclic, reroot_for  # noqa: E402
 from .shred import (Shred, ShredNode, build_shred, build_plan,  # noqa: E402
-                    reshred_incremental, PackedShred, pack_arena)
+                    reshred_incremental, PackedShred, PagedArena,
+                    pack_arena, pack_index)
 from .probe import (get, get_rows, csr_get_rows, usr_get_rows,  # noqa: E402
-                    usr_get_rows_fused)
+                    usr_get_rows_fused, usr_get_rows_paged)
 from . import sampling, estimate, yannakakis  # noqa: E402
 from .poisson import PoissonSampler, JoinSample  # noqa: E402
 
@@ -41,8 +42,9 @@ __all__ = [
     "Relation", "Database", "DeltaBatch", "RelationDelta", "Atom",
     "JoinQuery", "gyo_join_tree", "is_acyclic",
     "reroot_for", "Shred", "ShredNode", "build_shred", "build_plan",
-    "reshred_incremental", "PackedShred", "pack_arena", "get",
+    "reshred_incremental", "PackedShred", "PagedArena", "pack_arena",
+    "pack_index", "get",
     "get_rows", "csr_get_rows", "usr_get_rows", "usr_get_rows_fused",
-    "sampling", "estimate",
+    "usr_get_rows_paged", "sampling", "estimate",
     "yannakakis", "PoissonSampler", "JoinSample", "pack_keys", "dense_keys",
 ]

@@ -40,7 +40,7 @@ from jax.sharding import Mesh
 from .database import Database
 from .jointree import JoinQuery, JoinTreeNode
 from .relations import Relation, dense_keys
-from .shred import Shred, build_plan, build_shred, pack_arena
+from .shred import Shred, build_plan, build_shred, pack_index
 from repro.compat import axis_size
 
 __all__ = [
@@ -196,8 +196,9 @@ def _build_one_shard(sdb: Database, query: JoinQuery, rep: str,
         root = dataclasses.replace(sh.root, weight=w)
         prefE = jnp.concatenate([jnp.zeros((1,), I64), jnp.cumsum(w)])
         # Re-pack the fused-GET arena: it embeds root_prefE (DESIGN.md §4).
+        packed, paged = pack_index(root, prefE)
         sh = Shred(root=root, root_prefE=prefE, rep=sh.rep,
-                   packed=pack_arena(root, prefE))
+                   packed=packed, paged=paged)
     return sh
 
 
@@ -211,9 +212,11 @@ def _stack_shards(built, part: RootPartition, query: JoinQuery,
     mismatch. Otherwise the stack drops the arenas and the sharded
     executors take the per-node path (the documented fallback ladder,
     DESIGN.md §4/§9)."""
-    layouts = {None if b.packed is None else b.packed.layout for b in built}
-    if layouts != {None} and (None in layouts or len(layouts) > 1):
-        built = [dataclasses.replace(b, packed=None) for b in built]
+    layouts = {(None if b.packed is None else b.packed.layout,
+                None if b.paged is None else b.paged.layout) for b in built}
+    if layouts != {(None, None)} and len(layouts) > 1:
+        built = [dataclasses.replace(b, packed=None, paged=None)
+                 for b in built]
     shred = jax.tree.map(lambda *xs: jnp.stack(xs), *built)
     w = jnp.stack([b.root.weight for b in built])
     pvar = query.prob_var
@@ -312,14 +315,14 @@ def reshard_incremental(
         )
         if can_reuse:  # slice the full per-shard tree only for actual reuse
             sh = jax.tree.map(lambda x, s=s: x[s], stacked.shred)
-            if sh.packed is None:
+            if sh.packed is None and sh.paged is None:
                 # The stack may have dropped the arenas (a mixed per-shard
                 # narrowing verdict in an earlier epoch); re-pack so a reused
                 # shard carries exactly what a from-scratch build would —
                 # otherwise packed=None would propagate through every future
-                # reuse and the fused path would be lost until a rebind.
-                sh = dataclasses.replace(
-                    sh, packed=pack_arena(sh.root, sh.root_prefE))
+                # reuse and the fused/paged path would be lost until a rebind.
+                packed, paged = pack_index(sh.root, sh.root_prefE)
+                sh = dataclasses.replace(sh, packed=packed, paged=paged)
             built.append(sh)
             reused += 1
         else:

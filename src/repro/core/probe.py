@@ -35,16 +35,18 @@ import jax.numpy as jnp
 
 from repro import config
 from repro.kernels import ops
-from repro.kernels.fused_draw import fused_draw, fused_draw_ref
-from repro.kernels.tree_probe import tree_probe
+from repro.kernels.fused_draw import fused_draw, fused_draw_ref, fused_sample
+from repro.kernels.tree_probe import tree_probe, tree_probe_paged
 
 from .sampling import PositionSample
-from .shred import Shred, ShredNode
+from .shred import PagedArena, Shred, ShredNode
 
 __all__ = ["get", "get_rows", "gather_columns", "csr_get_rows",
-           "usr_get_rows", "usr_get_rows_fused", "csr_get_rows_cached",
-           "fused_available", "select_rep", "draw_fused_available",
-           "select_draw", "draw_fused"]
+           "usr_get_rows", "usr_get_rows_fused", "usr_get_rows_paged",
+           "csr_get_rows_cached", "fused_available", "paged_available",
+           "paged_view", "select_rep", "draw_fused_available",
+           "draw_paged_available", "select_draw", "draw_fused",
+           "draw_paged"]
 
 I64 = jnp.int64
 
@@ -60,7 +62,10 @@ def _root_locate(shred: Shred, pos: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarr
     """
     prefE = shred.root_prefE
     n = shred.root.num_rows
-    if shred.packed is not None and n and ops.pallas_preferred():
+    # Either index form (monolithic arena or paged) certifies the int32
+    # narrowing; the root prefix itself is always within one page.
+    if ((shred.packed is not None or shred.paged is not None)
+            and n and ops.pallas_preferred()):
         j = jnp.minimum(
             ops.searchsorted_prefix(prefE.astype(jnp.int32),
                                     pos.astype(jnp.int32)),
@@ -134,18 +139,52 @@ def fused_available(shred: Shred, policy=None) -> bool:
             and pol.enabled)
 
 
+def paged_view(shred: Shred):
+    """The shred's ``PagedArena``, or ``None``: the build-time one when
+    ``pack_index`` chose paging, else a page-sliced view of the monolithic
+    arena (static slice bounds — a call-time policy with a shrunken
+    ``vmem_limit`` pages an already-packed index without a rebuild)."""
+    if shred.paged is not None:
+        return shred.paged
+    if shred.packed is not None:
+        return PagedArena.from_packed(shred.packed)
+    return None
+
+
+def paged_available(shred: Shred, policy=None) -> bool:
+    """Static verdict for the *paged* rung (DESIGN.md §15): the fused
+    monolith does not apply, but an int32 index exists whose every page
+    fits the VMEM budget (total within ``config.PAGED_PACK_LIMIT``).
+    Sits strictly between ``fused`` and the per-node fallback in the
+    ladder — ``fused_available`` wins when both hold."""
+    pol = config.current_policy(policy)
+    if not pol.enabled or fused_available(shred, pol):
+        return False
+    layout = (shred.paged.layout if shred.paged is not None
+              else shred.packed.layout if shred.packed is not None else None)
+    if layout is None:
+        return False
+    return (layout.max_page <= pol.vmem_limit
+            and layout.size <= config.PAGED_PACK_LIMIT)
+
+
 def select_rep(shred: Shred, base: str, policy=None) -> Tuple[str, bool]:
     """The executor policy both plan layers share (DESIGN.md §4): given the
     rep a plan would use (``usr``/``csr``), return ``(rep, narrow)`` —
-    upgrade USR to the fused kernel and enable int32-narrowed sampler
-    searches iff the shred packed an arena AND the backend prefers Pallas
-    (compiled mode / ``REPRO_PALLAS_PREFER=1``). Single source of truth so
-    single-device and sharded plans cannot diverge."""
+    upgrade USR down the kernel ladder (``usr_fused``, then ``usr_paged``
+    when only the pages fit the VMEM budget) and enable int32-narrowed
+    sampler searches iff the shred packed an int32 index (monolithic or
+    paged) AND the backend prefers Pallas (compiled mode /
+    ``REPRO_PALLAS_PREFER=1``). Single source of truth so single-device
+    and sharded plans cannot diverge."""
     pol = config.current_policy(policy)
     prefer = pol.preferred
-    narrow = shred.packed is not None and prefer
-    if base == "usr" and prefer and fused_available(shred, pol):
-        return "usr_fused", narrow
+    narrow = (shred.packed is not None or shred.paged is not None) and prefer
+    if base == "usr" and prefer:
+        if fused_available(shred, pol):
+            return "usr_fused", narrow
+        if paged_available(shred, pol):
+            return "usr_paged", narrow
     return base, narrow
 
 
@@ -158,7 +197,8 @@ def usr_get_rows_fused(shred: Shred, pos: jnp.ndarray) -> Dict[str, jnp.ndarray]
 
       1. no packed arena (int32 narrowing refused: join > 2^31, or an
          empty node)                      -> per-node USR (or CSR) path;
-      2. arena over the VMEM budget       -> per-node path;
+      2. arena over the VMEM budget       -> the PAGED rung
+         (``usr_get_rows_paged``) when every page fits it, else per-node;
       3. ``REPRO_PALLAS_DISABLE=1``       -> per-node path.
 
     Positions are narrowed to int32 — exact, because a packed arena
@@ -166,15 +206,36 @@ def usr_get_rows_fused(shred: Shred, pos: jnp.ndarray) -> Dict[str, jnp.ndarray]
     out-of-range lanes are arbitrary-but-masked either way, §4).
     """
     if not fused_available(shred):
+        if paged_available(shred):
+            return usr_get_rows_paged(shred, pos)
         rep = "usr" if shred.rep in ("usr", "both") else "csr"
         return get_rows(shred, pos, rep=rep)
     packed = shred.packed
     k = pos.shape[0]
     tiles = ops.to_tiles(pos.astype(jnp.int32))
     out = tree_probe(packed.arena, tiles, layout=packed.layout,
+                     block_rows=ops.tile_for("tree_probe", k),
                      interpret=ops.interpret_default())
     flat = out.reshape(out.shape[0], -1)[:, :k]
     return {name: flat[i] for i, name in enumerate(packed.layout.names)}
+
+
+def usr_get_rows_paged(shred: Shred, pos: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+    """The paged rung's GET (DESIGN.md §15): the same walk as the fused
+    kernel, streamed page by page through VMEM (``tree_probe_paged`` —
+    double-buffered DMA on TPU, per-page launches elsewhere). Bit-identical
+    to ``usr_get_rows``/``usr_get_rows_fused`` at every position. Callers
+    reach it through ``select_rep``/``get_rows`` (rep ``usr_paged``) or the
+    fused ladder's fallback; it assumes ``paged_available`` held at
+    selection time."""
+    pv = paged_view(shred)
+    k = pos.shape[0]
+    tiles = ops.to_tiles(pos.astype(jnp.int32))
+    out = tree_probe_paged(pv.pages, tiles, layout=pv.layout,
+                           block_rows=ops.tile_for("tree_probe_paged", k),
+                           interpret=ops.interpret_default())
+    flat = out.reshape(out.shape[0], -1)[:, :k]
+    return {name: flat[i] for i, name in enumerate(pv.layout.names)}
 
 
 # ---------------------------------------------------------------------------
@@ -201,16 +262,36 @@ def draw_fused_available(shred: Shred, dparams, *, method: str, n: int = 0,
     return method == "exprace"
 
 
+def draw_paged_available(shred: Shred, dparams, *, method: str, n: int = 0,
+                         policy=None) -> bool:
+    """Static capability verdict for the *paged* draw (DESIGN.md §15): the
+    one-launch fused draw cannot apply (arena over the VMEM budget), but
+    the sampling half still fits — the root-level parameter vectors ride
+    with the root page — and the walk half can stream pages
+    (``paged_available``). Same method gates as the fused draw."""
+    pol = config.current_policy(policy)
+    if dparams is None or not paged_available(shred, pol):
+        return False
+    if method == "ptbern_flat":
+        return 0 < n <= pol.vmem_limit
+    return method == "exprace"
+
+
 def select_draw(shred: Shred, dparams, *, method: str, n: int = 0,
                 kernels: str = "auto", policy=None) -> str:
     """Resolve a ``DrawSpec.kernels`` request to the executor draw route —
-    ``'fused'`` (one Pallas launch), ``'reference'`` (same math, plain
-    traced jnp) or ``'pernode'`` (the F64 multi-launch path).  Decided at
-    plan-bind time, like ``select_rep``:
+    ``'fused'`` (one Pallas launch), ``'paged'`` (sample launch + page-
+    streamed walk), ``'reference'`` (same math, plain traced jnp) or
+    ``'pernode'`` (the F64 multi-launch path).  Decided at plan-bind time,
+    like ``select_rep``:
 
       * ``'auto'``   — fused iff capable AND the policy enables, prefers
-                       and hasn't opted out of the fused draw; else pernode.
+                       and hasn't opted out of the fused draw; else paged
+                       under the same preference gates when only the pages
+                       fit the VMEM budget; else pernode.
       * ``'fused'``  — explicit request: raise unless capable and enabled.
+      * ``'paged'``  — explicit request: raise unless the paged rung is
+                       capable and enabled (DESIGN.md §15).
       * ``'reference'`` — explicit request: raise unless capable (runs
                        without Pallas — it is the bit-identity oracle).
       * ``'pernode'`` — always honored (the precision arbiter).
@@ -218,6 +299,8 @@ def select_draw(shred: Shred, dparams, *, method: str, n: int = 0,
     pol = config.current_policy(policy)
     capable = draw_fused_available(shred, dparams, method=method, n=n,
                                    policy=pol)
+    paged_capable = draw_paged_available(shred, dparams, method=method, n=n,
+                                         policy=pol)
     if kernels == "pernode":
         return "pernode"
     if kernels == "fused":
@@ -228,8 +311,17 @@ def select_draw(shred: Shred, dparams, *, method: str, n: int = 0,
                 "budget, certified int32 narrowing, an exprace/ptbern_flat "
                 "method, and kernels enabled)")
         return "fused"
+    if kernels == "paged":
+        if not (paged_capable and pol.enabled):
+            raise ValueError(
+                "kernels='paged' requested but the paged draw is "
+                "unavailable here (needs an int32 index whose arena "
+                "exceeds the VMEM budget while every page fits it, "
+                "certified narrowing, an exprace/ptbern_flat method, and "
+                "kernels enabled)")
+        return "paged"
     if kernels == "reference":
-        if not capable:
+        if not (capable or paged_capable):
             raise ValueError(
                 "kernels='reference' requested but the fused-draw operands "
                 "are unavailable here (needs a packed arena within the "
@@ -237,8 +329,11 @@ def select_draw(shred: Shred, dparams, *, method: str, n: int = 0,
         return "reference"
     if kernels != "auto":
         raise ValueError(f"unknown kernels request {kernels!r}")
-    if capable and pol.enabled and pol.fused_draw and pol.preferred:
-        return "fused"
+    if pol.enabled and pol.fused_draw and pol.preferred:
+        if capable:
+            return "fused"
+        if paged_capable:
+            return "paged"
     return "pernode"
 
 
@@ -254,19 +349,50 @@ def draw_fused(shred: Shred, dparams, key, *, method: str, cap: int,
     beyond ``ps.count`` arbitrary-but-masked, the GET contract) and a
     ``PositionSample`` with the usual int64/sentinel-n conventions, so
     downstream compaction/masking is route-agnostic."""
-    packed = shred.packed
+    if shred.packed is not None:
+        arena, layout = shred.packed.arena, shred.packed.layout
+    else:
+        # Paged-only index on the reference route: the pages concatenate
+        # back to the monolithic arena exactly (contiguous slices).
+        arena = jnp.concatenate(shred.paged.pages)
+        layout = shred.paged.layout
     key_data = jax.random.key_data(key).astype(jnp.uint32)
     if reference:
         rows, pos, cnt, ovf = fused_draw_ref(
-            packed.arena, key_data, dparams, layout=packed.layout,
+            arena, key_data, dparams, layout=layout,
             method=method, cap=cap, acap=acap, n=n)
     else:
         rows, pos, cnt, ovf = fused_draw(
-            packed.arena, key_data, dparams, layout=packed.layout,
+            arena, key_data, dparams, layout=layout,
             method=method, cap=cap, acap=acap, n=n,
             interpret=ops.interpret_default(policy))
     node_rows = {name: rows[i]
-                 for i, name in enumerate(packed.layout.names)}
+                 for i, name in enumerate(layout.names)}
+    ps = PositionSample(pos.astype(I64), cnt.astype(I64), ovf)
+    return node_rows, ps
+
+
+def draw_paged(shred: Shred, dparams, key, *, method: str, cap: int,
+               acap: int = 0, n: int = 0, policy=None):
+    """The paged rung's draw (DESIGN.md §15): the sampling half in one
+    kernel launch (``fused_sample`` — the exact ``draw_core`` the fused
+    draw and its reference run, so positions are bit-identical under the
+    same key), then the walk half streamed page by page
+    (``tree_probe_paged`` — bit-identical to ``tree_walk``). Same return
+    contract as ``draw_fused``."""
+    pv = paged_view(shred)
+    key_data = jax.random.key_data(key).astype(jnp.uint32)
+    pos, cnt, ovf = fused_sample(
+        key_data, dparams, method=method, cap=cap, acap=acap, n=n,
+        interpret=ops.interpret_default(policy))
+    # Clamp sentinels for the walk (arbitrary-but-masked, the GET contract).
+    wpos = jnp.minimum(pos, dparams["prefE32"][-1] - 1)
+    tiles = ops.to_tiles(wpos)
+    rows = tree_probe_paged(pv.pages, tiles, layout=pv.layout,
+                            block_rows=ops.tile_for("tree_probe_paged", cap),
+                            interpret=ops.interpret_default(policy))
+    flat = rows.reshape(rows.shape[0], -1)[:, :cap]
+    node_rows = {name: flat[i] for i, name in enumerate(pv.layout.names)}
     ps = PositionSample(pos.astype(I64), cnt.astype(I64), ovf)
     return node_rows, ps
 
@@ -391,6 +517,8 @@ def get_rows(shred: Shred, pos: jnp.ndarray, rep: str = None) -> Dict[str, jnp.n
     rep = rep or ("usr" if shred.rep in ("usr", "both") else "csr")
     if rep == "usr_fused":
         return usr_get_rows_fused(shred, pos)
+    if rep == "usr_paged":
+        return usr_get_rows_paged(shred, pos)
     if rep == "usr":
         return usr_get_rows(shred, pos)
     return csr_get_rows(shred, pos)

@@ -41,8 +41,8 @@ from .jointree import Atom, JoinQuery, JoinTreeNode, gyo_join_tree, reroot_for
 from .relations import Relation, dense_keys
 
 __all__ = ["ShredNode", "Shred", "build_shred", "build_plan",
-           "reshred_incremental", "PackedShred", "ArenaLayout", "ArenaEdge",
-           "pack_arena"]
+           "reshred_incremental", "PackedShred", "PagedArena", "ArenaLayout",
+           "ArenaEdge", "pack_arena", "pack_index"]
 
 I64 = jnp.int64
 I32 = jnp.int32
@@ -145,6 +145,23 @@ class ArenaLayout:
     def num_slots(self) -> int:
         return len(self.names)
 
+    def page_bounds(self) -> Tuple[Tuple[int, int], ...]:
+        """Per-page ``(start, end)`` element ranges of the paged split
+        (DESIGN.md §15): page 0 is the root prefix, page ``i+1`` is edge
+        ``i``'s four columns — which ``pack_arena`` lays out consecutively
+        (``child_start``/``child_w``/``cumw_excl``/``perm``), so every page
+        is one contiguous slice of the monolithic arena and the pages
+        concatenate back to it exactly."""
+        return ((0, self.root_len),) + tuple(
+            (e.cs_off, e.perm_off + e.n_child) for e in self.edges)
+
+    @property
+    def max_page(self) -> int:
+        """Largest page in int32 elements — the VMEM working set of the
+        paged probe (two double-buffered pages of this size), the quantity
+        the paged rung gates against ``KernelPolicy.vmem_limit``."""
+        return max(end - start for start, end in self.page_bounds())
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
@@ -168,19 +185,49 @@ class PackedShred:
         return cls(leaves[0], aux[0])
 
 
-def pack_arena(root: "ShredNode",
-               root_prefE: jnp.ndarray) -> Optional["PackedShred"]:
-    """Pack a shred's probe tables into a ``PackedShred`` arena, or return
-    ``None`` when the fused path cannot apply: an empty node (nothing to
-    probe — callers guard ``join_size == 0`` anyway), any value above
-    int32 range (the documented int64 fallback, DESIGN.md §9), or a total
-    size over the VMEM table budget — an over-budget arena would be
-    rejected by every consumer (``probe.fused_available`` and the
-    narrowed Pallas searchsorted alike), so materializing the int32 copy
-    would only waste device memory on every cached index.
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PagedArena:
+    """The page-sliced sibling of ``PackedShred`` (DESIGN.md §15): the same
+    int32 index, same ``ArenaLayout``, but held as one array per page
+    (``layout.page_bounds()`` — root prefix, then one page per tree edge)
+    instead of one monolithic buffer. Built when the arena exceeds the
+    VMEM budget but every page fits it: the paged tree-probe streams the
+    pages through VMEM (double-buffered DMA on TPU, one launch per page on
+    GPU/CPU) instead of dropping to the ~4-9x-slower per-node path.
 
-    Layout: ``root_prefE`` at offset 0, then per tree edge in the exact
-    pre-order the per-node GET recurses (``probe._usr_sub``):
+    Pages are contiguous slices of the monolithic arena, so all in-page
+    offsets are the ``ArenaEdge`` offsets rebased by the page start —
+    static arithmetic, no extra metadata."""
+
+    pages: Tuple[jnp.ndarray, ...]  # per-page int32, sizes per page_bounds()
+    layout: ArenaLayout
+
+    def tree_flatten(self):
+        return (self.pages,), (self.layout,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(leaves[0], aux[0])
+
+    @classmethod
+    def from_packed(cls, packed: "PackedShred") -> "PagedArena":
+        """Page-slice an existing monolithic arena (static bounds — traces
+        cleanly, so a call-time policy with a shrunken ``vmem_limit`` can
+        derive the paged view of an already-packed shred on the fly)."""
+        pages = tuple(packed.arena[s:e]
+                      for s, e in packed.layout.page_bounds())
+        return cls(pages, packed.layout)
+
+
+def _arena_pieces(root: "ShredNode", root_prefE: jnp.ndarray):
+    """The shared packing walk: the arena's numpy pieces + its layout, or
+    ``None`` when int32 narrowing is refused (an empty node — nothing to
+    probe, callers guard ``join_size == 0`` anyway — or any value above
+    int32 range, the documented int64 fallback, DESIGN.md §9).
+
+    Piece order: ``root_prefE`` at offset 0, then per tree edge in the
+    exact pre-order the per-node GET recurses (``probe._usr_sub``):
     ``child_start``, ``child_w``, ``cumw_excl``, ``perm``.
     """
     if any(nd.num_rows == 0 for nd in root.nodes()):
@@ -209,16 +256,71 @@ def pack_arena(root: "ShredNode",
             walk(child, slot)
 
     walk(root, 0)
-    if off > _kops.VMEM_PREF_LIMIT:
-        return None  # over the VMEM table budget: no consumer could use it
     for p in pieces:
         if p.size and int(p.max()) > _I32_MAX:
             return None  # narrowing rule: values must fit int32
+    layout = ArenaLayout(tuple(names), root.num_rows,
+                         pieces[0].shape[0], tuple(edges), off)
+    return pieces, layout
+
+
+def pack_arena(root: "ShredNode",
+               root_prefE: jnp.ndarray) -> Optional["PackedShred"]:
+    """Pack a shred's probe tables into a monolithic ``PackedShred`` arena,
+    or return ``None`` when the fused path cannot apply (``_arena_pieces``
+    narrowing refusals, or a total size over the default VMEM table budget
+    — an over-budget monolith would be rejected by every consumer, so the
+    int32 copy would only waste device memory). Kept as the monolith-only
+    back-compat entry point; index builds go through ``pack_index``, which
+    adds the paged alternative."""
+    got = _arena_pieces(root, root_prefE)
+    if got is None:
+        return None
+    pieces, layout = got
+    if layout.size > _kops.VMEM_PREF_LIMIT:
+        return None
     arena = jnp.asarray(
         np.concatenate([p.astype(np.int32) for p in pieces]))
-    layout = ArenaLayout(tuple(names), root.num_rows,
-                         pieces[0].shape[0], tuple(edges), int(arena.shape[0]))
     return PackedShred(arena, layout)
+
+
+def pack_index(root: "ShredNode", root_prefE: jnp.ndarray, policy=None
+               ) -> Tuple[Optional["PackedShred"], Optional["PagedArena"]]:
+    """Pack a shred's probe tables for the fused GET/draw kernels, choosing
+    the representation by size against the active ``KernelPolicy``
+    (DESIGN.md §15). Returns ``(packed, paged)``, at most one non-None:
+
+      * arena fits ``vmem_limit``                     -> monolithic
+        ``PackedShred`` (the fused one-launch rung);
+      * over the budget, but every page fits it and the total is within
+        ``config.PAGED_PACK_LIMIT``                   -> ``PagedArena``
+        (the paged streaming rung);
+      * narrowing refused, or too large even to page  -> ``(None, None)``
+        (the int64 per-node path stands, DESIGN.md §9).
+
+    Mutually exclusive by construction — the engine never pays 2x device
+    memory for the same int32 index, and a monolithic arena can still be
+    page-sliced at call time (``PagedArena.from_packed``) when a scoped
+    policy shrinks the budget under it.
+    """
+    from repro import config  # local: keep shred importable sans config cycle
+
+    pol = config.current_policy(policy)
+    got = _arena_pieces(root, root_prefE)
+    if got is None:
+        return None, None
+    pieces, layout = got
+    if layout.size <= pol.vmem_limit:
+        arena = jnp.asarray(
+            np.concatenate([p.astype(np.int32) for p in pieces]))
+        return PackedShred(arena, layout), None
+    if (layout.size <= config.PAGED_PACK_LIMIT
+            and layout.max_page <= pol.vmem_limit):
+        bounds = layout.page_bounds()
+        flat = np.concatenate([p.astype(np.int32) for p in pieces])
+        pages = tuple(jnp.asarray(flat[s:e]) for s, e in bounds)
+        return None, PagedArena(pages, layout)
+    return None, None
 
 
 @jax.tree_util.register_pytree_node_class
@@ -228,22 +330,28 @@ class Shred:
 
     root_prefE: (n_root + 1,) int64 exclusive prefix of root weights;
     root_prefE[-1] == |mu*(N)| == |Q(db)|.
-    packed: the optional fused-GET int32 arena (``pack_arena``); ``None``
-    when narrowing does not apply — its presence is *static* (part of the
-    pytree structure), so jitted executors dispatch on it at trace time.
+    packed: the optional fused-GET int32 arena (``pack_index``); ``None``
+    when narrowing does not apply or the arena is paged instead — its
+    presence is *static* (part of the pytree structure), so jitted
+    executors dispatch on it at trace time.
+    paged: the page-sliced arena (``PagedArena``) when the index exceeds
+    the VMEM budget but pages fit it (DESIGN.md §15); mutually exclusive
+    with ``packed``, equally static.
     """
 
     root: ShredNode
     root_prefE: jnp.ndarray
     rep: str  # 'csr' | 'usr' | 'both' (static)
     packed: Optional[PackedShred] = None
+    paged: Optional[PagedArena] = None
 
     def tree_flatten(self):
-        return (self.root, self.root_prefE, self.packed), (self.rep,)
+        return ((self.root, self.root_prefE, self.packed, self.paged),
+                (self.rep,))
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
-        return cls(leaves[0], leaves[1], aux[0], leaves[2])
+        return cls(leaves[0], leaves[1], aux[0], leaves[2], leaves[3])
 
     @property
     def join_size(self) -> jnp.ndarray:
@@ -395,8 +503,9 @@ def build_shred(db: Database, query: JoinQuery, rep: str = "usr") -> Shred:
     plan = build_plan(query)
     root = _build_node(plan, db, rep, frozenset())
     prefE = jnp.concatenate([jnp.zeros((1,), I64), jnp.cumsum(root.weight)])
+    packed, paged = pack_index(root, prefE)
     return Shred(root=root, root_prefE=prefE, rep=rep,
-                 packed=pack_arena(root, prefE))
+                 packed=packed, paged=paged)
 
 
 # ---------------------------------------------------------------------------
@@ -761,6 +870,8 @@ def reshred_incremental(base: Shred, db: Database, query: JoinQuery,
         prefE = base.root_prefE
     # The fused-GET arena is re-packed from the merged arrays (a flat
     # concat — bulk copy, not sort work), keeping it coherent with the
-    # incremental index: bit-identical to a from-scratch build's arena.
+    # incremental index: bit-identical to a from-scratch build's arena,
+    # including the packed-vs-paged verdict (pack_index, DESIGN.md §15).
+    packed, paged = pack_index(root, prefE)
     return Shred(root=root, root_prefE=prefE, rep=base.rep,
-                 packed=pack_arena(root, prefE))
+                 packed=packed, paged=paged)

@@ -49,6 +49,12 @@ def _sample_jit(
             shred, dparams, key, method=method, cap=cap, acap=acap, n=n,
             reference=(route == "reference"))
         cols = probe.gather_columns(shred, node_rows)
+    elif route == "paged":
+        # Paged rung (DESIGN.md §15): one sampling launch, then the walk
+        # streamed page by page — same draw_core stream as the fused route.
+        node_rows, ps = probe.draw_paged(
+            shred, dparams, key, method=method, cap=cap, acap=acap, n=n)
+        cols = probe.gather_columns(shred, node_rows)
     elif method == "exprace":
         ps = sampling.exprace_positions(key, w, p, prefE, cap,
                                         arrival_cap=acap, narrow=narrow)
@@ -56,7 +62,7 @@ def _sample_jit(
         ps = sampling.pt_bern_flat_positions(key, p, prefE, n, cap)
     else:
         raise ValueError(f"unknown jit sampling method {method!r}")
-    if route not in ("fused", "reference"):
+    if route not in ("fused", "reference", "paged"):
         pos = jnp.minimum(ps.positions, jnp.maximum(prefE[-1] - 1, 0))  # clamp
         cols = probe.get(shred, pos, rep=rep)
     if project is not None:

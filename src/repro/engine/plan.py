@@ -93,7 +93,7 @@ class CompiledPlan:
         arena's existence is the exactness proof (DESIGN.md §4)."""
         if self.spec.narrow is None:
             return auto_narrow
-        if self.spec.narrow and shred.packed is None:
+        if self.spec.narrow and shred.packed is None and shred.paged is None:
             raise ValueError(
                 "DrawSpec(narrow=True) requires a packed int32 index "
                 "(join < 2^31, no empty node); this shred has none")

@@ -138,7 +138,8 @@ class ShardedPlan:
         # wins over the auto verdict, exactly like the single-device plan.
         rep, narrow = probe.select_rep(stacked.shred, self._base_rep)
         if self.spec.narrow is not None:
-            if self.spec.narrow and stacked.shred.packed is None:
+            if (self.spec.narrow and stacked.shred.packed is None
+                    and stacked.shred.paged is None):
                 raise ValueError(
                     "DrawSpec(narrow=True) requires a packed int32 index; "
                     "this stacked shred has none")

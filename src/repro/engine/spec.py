@@ -31,7 +31,7 @@ __all__ = ["DrawSpec", "merge_spec"]
 
 _REPS = (None, "csr", "usr", "both")
 _METHODS = ("exprace", "ptbern_flat")
-_KERNELS = ("auto", "fused", "pernode", "reference")
+_KERNELS = ("auto", "fused", "paged", "pernode", "reference")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,13 +51,17 @@ class DrawSpec:
     narrow   int32-narrowed sampler searches: None = auto (on iff the index
              packed an int32 arena and the backend prefers Pallas), True =
              force on (requires a packed index), False = force off.
-    kernels  draw-kernel route (DESIGN.md §14): ``auto`` = the one-launch
-             fused draw iff capable and the active ``KernelPolicy`` prefers
-             it, else the multi-launch per-node path; ``fused`` = require
-             the fused kernel (raises at bind if unavailable);
-             ``reference`` = the fused pipeline as plain traced jnp (the
-             bit-identity oracle); ``pernode`` = always the F64
-             multi-launch path (the precision arbiter).
+    kernels  draw-kernel route (DESIGN.md §14/§15): ``auto`` = the
+             one-launch fused draw iff capable and the active
+             ``KernelPolicy`` prefers it, degrading to the *paged* route
+             (sample launch + page-streamed walk) when only the index's
+             pages fit the VMEM budget, else the multi-launch per-node
+             path; ``fused`` = require the fused kernel (raises at bind if
+             unavailable); ``paged`` = require the paged route (raises if
+             the index is not in the paged regime); ``reference`` = the
+             fused pipeline as plain traced jnp (the bit-identity oracle);
+             ``pernode`` = always the F64 multi-launch path (the precision
+             arbiter).
     mesh     device mesh: route through the sharded plan (DESIGN.md §8).
     axes     mesh axes to partition the root over (None = shard planner).
     """

@@ -1,0 +1,445 @@
+"""Backend-aware kernel tile autotuning (DESIGN.md §15).
+
+Every Pallas kernel in this package used to hardcode one tile shape
+(``DEFAULT_BLOCK_ROWS = 8`` in ``tree_probe``/``bsearch_probe``, 512-wide
+KV tiles in ``flash_decode``, ...) — tuned for exactly one regime on one
+substrate. This module replaces the module constants with a three-rung
+resolution ladder, applied at trace time by ``kernels/ops.py`` and
+``core/probe.py``:
+
+    1. ``KernelPolicy.tile_overrides``  — per-call/operator pin, wins;
+    2. ``TUNE_TABLE.json``              — the committed table, keyed by
+       ``config.backend_key()`` (``'<backend>/<device-kind>'``) with a
+       mandatory ``'default'`` entry, then by problem-size bucket
+       (``bucket_of``: power-of-two buckets, ``'*'`` = any size);
+    3. the kernel's builtin default     — the historical constant.
+
+The table is *data, not measurement*: CI and every fresh checkout resolve
+tiles deterministically from the committed JSON (the ``default`` entry
+mirrors the builtin defaults, so an unknown backend behaves exactly like
+the pre-autotuner code). Winners are (re)measured explicitly::
+
+    PYTHONPATH=src python -m repro.kernels.autotune --sweep --write
+
+which times a small static candidate grid per (kernel, size bucket) on
+the live backend — via ``benchmarks/timing.time_fn`` when the repo
+harness is importable, a minimal local twin otherwise — and persists the
+winners under this process's ``backend_key()``. Tile shapes never change
+results (every kernel is bit-identical across its candidate grid — the
+grid only re-tiles the probe/query axis), so a stale table is a
+performance bug, not a correctness bug.
+
+``--check`` is the CI schema gate (the ``tune-smoke`` step): the
+committed table must parse, carry the current schema version, name only
+live kernels (a renamed kernel fails the gate instead of silently
+orphaning its rows), and provide a ``default`` row for every registered
+kernel.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Callable, Dict, Optional, Sequence
+
+from repro import config
+
+__all__ = [
+    "KERNELS", "TABLE_PATH", "TABLE_VERSION", "TunableKernel", "bucket_of",
+    "load_table", "tile_for", "sweep", "check_table", "main",
+]
+
+TABLE_PATH = Path(__file__).resolve().parent / "TUNE_TABLE.json"
+TABLE_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class TunableKernel:
+    """One autotunable kernel: the tile parameter it exposes, the static
+    candidate grid the sweep measures, and the builtin default (the
+    pre-autotuner module constant, kept as the last resolution rung)."""
+
+    param: str
+    candidates: tuple
+    default: object
+    sizes: tuple  # representative problem sizes swept per bucket
+
+
+# The registry: names are the public tuning identity (table keys, policy
+# override keys). Candidates are deliberately small static grids — the
+# point is killing the hardcoded constant, not an exhaustive search.
+KERNELS: Dict[str, TunableKernel] = {
+    # probe-tile rows of the fused GET walk (kernels/tree_probe.tree_probe)
+    "tree_probe": TunableKernel(
+        "block_rows", (4, 8, 16, 32), 8, (512, 1 << 14)),
+    # probe-tile rows of the paged walk (tree_probe_paged, DESIGN.md §15)
+    "tree_probe_paged": TunableKernel(
+        "block_rows", (4, 8, 16, 32), 8, (512, 1 << 14)),
+    # query-tile rows of the bulk prefix bsearch (bsearch_probe)
+    "bsearch_probe": TunableKernel(
+        "block_rows", (4, 8, 16, 32), 8, (512, 1 << 14)),
+    # KV tile length of online-softmax decode attention (flash_decode)
+    "flash_decode": TunableKernel(
+        "block_s", (256, 512, 1024), 512, (2048,)),
+    # (block_q, block_k) of causal flash attention (flash_prefill)
+    "flash_prefill": TunableKernel(
+        "(block_q, block_k)", ((128, 256), (256, 256), (256, 512)),
+        (256, 512), (1024,)),
+}
+
+
+def bucket_of(size: int) -> str:
+    """The power-of-two problem-size bucket ``size`` lands in: ``'p<k>'``
+    with the smallest k such that ``size <= 2**k`` (``p0`` for sizes <= 1).
+    Shapes within one bucket share a tuned tile — the same granularity the
+    engine's batch bucketing uses (DESIGN.md §10), so warm paths never
+    retrace on a tile flip within a bucket."""
+    return f"p{max(int(size) - 1, 0).bit_length()}"
+
+
+def _normalize(value, spec: TunableKernel):
+    """JSON round-trips tuples as lists; fold them back so values compare
+    and hash like the candidate grid entries. Raises ``TypeError``/
+    ``ValueError`` on anything not shaped like the kernel's parameter
+    (``--check`` turns that into a schema failure)."""
+    if isinstance(spec.default, tuple):
+        if isinstance(value, (str, bytes)) or len(value) != len(spec.default):
+            raise ValueError(f"want a {len(spec.default)}-tuple, got {value!r}")
+        return tuple(int(v) for v in value)
+    if isinstance(value, (str, bytes)):
+        raise ValueError(f"want an int, got {value!r}")
+    return int(value)
+
+
+@functools.lru_cache(maxsize=None)
+def _load_raw(path_str: str, mtime: float) -> dict:
+    return json.loads(Path(path_str).read_text())
+
+
+def load_table(path: Path = None) -> dict:
+    """The parsed tuning table ({} when absent). Cached per (path, mtime)
+    so trace-time ``tile_for`` calls never re-read the file, while a
+    ``--write`` from the same process is picked up."""
+    path = path or TABLE_PATH
+    try:
+        return _load_raw(str(path), path.stat().st_mtime)
+    except (OSError, json.JSONDecodeError):
+        return {}
+
+
+def tile_for(kernel: str, size: int,
+             policy: Optional[config.KernelPolicy] = None):
+    """Resolve ``kernel``'s tile for a problem of ``size`` through the
+    ladder: policy ``tile_overrides`` > committed table (backend entry,
+    then ``default``; size bucket, then ``'*'``) > builtin default.
+
+    Called at trace time from the ops wrappers — ``size`` is a static
+    shape, so the resolved tile is a static kernel parameter and distinct
+    buckets are distinct cached traces (same economics as ``cap``)."""
+    spec = KERNELS[kernel]
+    pol = config.current_policy(policy)
+    override = pol.tile_override(kernel)
+    if override is not None:
+        return _normalize(override, spec)
+    if not pol.tuned:
+        return spec.default
+    entries = load_table().get("entries", {})
+    for key in (config.backend_key(), "default"):
+        rows = entries.get(key, {}).get(kernel)
+        if not rows:
+            continue
+        value = rows.get(bucket_of(size), rows.get("*"))
+        if value is not None:
+            return _normalize(value, spec)
+    return spec.default
+
+
+# ---------------------------------------------------------------------------
+# Sweep: measure the candidate grid on the live backend.
+# ---------------------------------------------------------------------------
+
+def _default_timer(fn: Callable[[], object]) -> float:
+    """Median wall-microseconds of ``fn()`` — ``benchmarks.timing.time_fn``
+    when the repo harness is on the path (the documented invocation runs
+    from the repo root), else a minimal local twin with the same
+    warmup/median discipline."""
+    try:
+        from benchmarks.timing import time_fn
+        return time_fn(fn)
+    except ImportError:
+        import jax
+        for _ in range(2):
+            jax.block_until_ready(fn())
+        times = []
+        for _ in range(5):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            times.append(time.perf_counter() - t0)
+        times.sort()
+        return times[len(times) // 2] * 1e6
+
+
+def _candidate_thunks(kernel: str, size: int, interpret: bool):
+    """Build ``candidate -> zero-arg timed thunk`` for one (kernel, size).
+    Imports jax/core lazily — the module itself must stay importable for
+    the stdlib-only ``--check`` path."""
+    import jax
+    import jax.numpy as jnp
+
+    if kernel in ("tree_probe", "tree_probe_paged", "bsearch_probe"):
+        if kernel == "bsearch_probe":
+            from .bsearch_probe import bsearch_probe
+            n = 1 << 15
+            pref = jnp.concatenate([
+                jnp.zeros((1,), jnp.int32),
+                jnp.cumsum(jnp.ones((n - 1,), jnp.int32))])
+            rows = -(-size // 128)
+            q = jax.random.randint(jax.random.key(0), (rows, 128), 0, n,
+                                   dtype=jnp.int32)
+
+            def make(cand):
+                def thunk():
+                    return jax.block_until_ready(
+                        bsearch_probe(pref, q, block_rows=cand,
+                                      interpret=interpret))
+                return thunk
+            return make
+        from repro.core import Atom, Database, JoinQuery, build_shred
+        from repro.core.shred import PagedArena
+        from .tree_probe import tree_probe, tree_probe_paged
+        import numpy as np
+        rng = np.random.default_rng(0)
+        m = 512
+        db = Database.from_columns({
+            "R": {"x": rng.integers(0, m // 4, m),
+                  "y": rng.integers(0, m // 4, m)},
+            "S": {"y": rng.integers(0, m // 4, m),
+                  "z": rng.integers(0, m // 4, m)},
+            "T": {"z": rng.integers(0, m // 4, m),
+                  "u": rng.integers(0, m // 4, m)},
+        })
+        q = JoinQuery((Atom.of("R", "x", "y"), Atom.of("S", "y", "z"),
+                       Atom.of("T", "z", "u")))
+        shred = build_shred(db, q, rep="usr")
+        packed = shred.packed
+        if packed is None:
+            raise RuntimeError("sweep workload failed to pack an arena")
+        n = int(shred.join_size)
+        rows = -(-size // 128)
+        qs = jax.random.randint(jax.random.key(1), (rows, 128), 0, max(n, 1),
+                                dtype=jnp.int32)
+        if kernel == "tree_probe":
+            def make(cand):
+                def thunk():
+                    return jax.block_until_ready(tree_probe(
+                        packed.arena, qs, layout=packed.layout,
+                        block_rows=cand, interpret=interpret))
+                return thunk
+            return make
+        paged = PagedArena.from_packed(packed)
+
+        def make(cand):
+            def thunk():
+                return jax.block_until_ready(tree_probe_paged(
+                    paged.pages, qs, layout=paged.layout, block_rows=cand,
+                    interpret=interpret))
+            return thunk
+        return make
+
+    if kernel == "flash_decode":
+        from .flash_decode import flash_decode
+        B, H, D, S = 2, 4, 64, size
+        key = jax.random.key(2)
+        qv = jax.random.normal(key, (B, H, D), jnp.float32)
+        kv = jax.random.normal(key, (B, H, S, D), jnp.float32)
+        bias = jnp.zeros((B, S), jnp.float32)
+
+        def make(cand):
+            def thunk():
+                return jax.block_until_ready(flash_decode(
+                    qv, kv, kv, bias, block_s=cand, interpret=interpret))
+            return thunk
+        return make
+
+    if kernel == "flash_prefill":
+        from .flash_prefill import flash_prefill
+        B, H, D, S = 1, 2, 64, size
+        key = jax.random.key(3)
+        qv = jax.random.normal(key, (B, H, S, D), jnp.float32)
+
+        def make(cand):
+            def thunk():
+                return jax.block_until_ready(flash_prefill(
+                    qv, qv, qv, block_q=cand[0], block_k=cand[1],
+                    interpret=interpret))
+            return thunk
+        return make
+
+    raise ValueError(f"no sweep workload for kernel {kernel!r}")
+
+
+def sweep(kernels: Optional[Sequence[str]] = None, *,
+          timer: Optional[Callable[[Callable], float]] = None,
+          candidates: Optional[dict] = None,
+          sizes: Optional[dict] = None,
+          entry_key: Optional[str] = None,
+          write: bool = False,
+          path: Optional[Path] = None,
+          out: Callable[[str], None] = print) -> dict:
+    """Measure the candidate grid per (kernel, size bucket) and return the
+    winner map ``{kernel: {bucket: value}}``; with ``write=True`` persist
+    it under ``entry_key`` (default: this process's ``backend_key()``) in
+    ``TUNE_TABLE.json``, creating the table (with its mandatory builtin
+    ``default`` entry) if absent.
+
+    ``timer`` is injectable (tests pass a deterministic fake — the unit
+    leg never depends on wall clocks); ``candidates``/``sizes`` override
+    the registry grids per kernel name."""
+    timer = timer or _default_timer
+    names = list(kernels) if kernels else list(KERNELS)
+    pol = config.current_policy()
+    winners: dict = {}
+    for name in names:
+        spec = KERNELS[name]  # KeyError = caller bug, surfaced as-is
+        cands = tuple((candidates or {}).get(name, spec.candidates))
+        ksizes = tuple((sizes or {}).get(name, spec.sizes))
+        winners[name] = {}
+        for size in ksizes:
+            best, best_us = None, None
+            for cand in cands:
+                make = _candidate_thunks(name, size, pol.interpret)
+                us = timer(make(cand))
+                out(f"autotune: {name}[{bucket_of(size)}] "
+                    f"{spec.param}={cand}: {us:.1f}us")
+                if best_us is None or us < best_us:
+                    best, best_us = cand, us
+            winners[name][bucket_of(size)] = best
+            out(f"autotune: {name}[{bucket_of(size)}] winner: "
+                f"{spec.param}={best}")
+    if write:
+        key = entry_key or config.backend_key()
+        _write_table(winners, key, path or TABLE_PATH, out)
+    return winners
+
+
+def default_entry() -> dict:
+    """The mandatory ``default`` table entry: every registered kernel's
+    builtin default under the any-size bucket — byte-for-byte what an
+    unknown backend resolves to, committed so CI can diff it."""
+    return {name: {"*": spec.default} for name, spec in KERNELS.items()}
+
+
+def _write_table(winners: dict, entry_key: str, path: Path, out) -> None:
+    table = load_table(path) or {"version": TABLE_VERSION, "entries": {}}
+    table.setdefault("entries", {})["default"] = default_entry()
+    entry = table["entries"].setdefault(entry_key, {})
+    for name, rows in winners.items():
+        entry.setdefault(name, {}).update(rows)
+    path.write_text(json.dumps(table, indent=2, sort_keys=True) + "\n")
+    _load_raw.cache_clear()
+    out(f"autotune: wrote {path} (entry {entry_key!r})")
+
+
+# ---------------------------------------------------------------------------
+# --check: the CI schema gate (tune-smoke step). Stdlib-only on purpose.
+# ---------------------------------------------------------------------------
+
+def check_table(path: Optional[Path] = None,
+                out: Callable[[str], None] = print) -> int:
+    """Validate the committed table: parses, current version, a ``default``
+    entry covering every registered kernel, no stale kernel names, and
+    every value shaped like its kernel's parameter. Returns 0 (ok) or 1."""
+    path = path or TABLE_PATH
+    errors = []
+    if not path.is_file():
+        errors.append(f"missing {path.name} — run "
+                      f"`python -m repro.kernels.autotune --sweep --write` "
+                      f"or commit the default table")
+        table = {}
+    else:
+        try:
+            table = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            errors.append(f"{path.name} is not valid JSON: {e}")
+            table = {}
+    if table:
+        if table.get("version") != TABLE_VERSION:
+            errors.append(f"version {table.get('version')!r} != "
+                          f"{TABLE_VERSION} (schema drift)")
+        entries = table.get("entries")
+        if not isinstance(entries, dict) or "default" not in entries:
+            errors.append("entries.default missing — every checkout must "
+                          "resolve tiles without live tuning")
+            entries = entries if isinstance(entries, dict) else {}
+        for ekey, entry in entries.items():
+            stale = sorted(set(entry) - set(KERNELS))
+            if stale:
+                errors.append(f"entry {ekey!r} names unknown kernels "
+                              f"{stale} — renamed? prune or re-sweep")
+            for kname, rows in entry.items():
+                if kname not in KERNELS:
+                    continue
+                spec = KERNELS[kname]
+                for bucket, value in rows.items():
+                    if bucket != "*" and not (
+                            bucket.startswith("p")
+                            and bucket[1:].isdigit()):
+                        errors.append(f"{ekey}/{kname}: bad bucket "
+                                      f"{bucket!r} (want 'p<k>' or '*')")
+                    try:
+                        _normalize(value, spec)
+                    except (TypeError, ValueError):
+                        errors.append(f"{ekey}/{kname}[{bucket}]: value "
+                                      f"{value!r} does not parse as "
+                                      f"{spec.param}")
+        if "default" in entries:
+            missing = sorted(set(KERNELS) - set(entries["default"]))
+            if missing:
+                errors.append(f"default entry missing rows for {missing} — "
+                              f"every kernel needs a deterministic default")
+    if errors:
+        out(f"autotune --check: FAILED ({path})")
+        for e in errors:
+            out(f"  {e}")
+        return 1
+    n = sum(len(rows) for e in table["entries"].values()
+            for rows in e.values())
+    out(f"autotune --check: ok ({len(table['entries'])} entries, "
+        f"{n} rows, {len(KERNELS)} kernels)")
+    return 0
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Kernel tile autotuner (DESIGN.md §15)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate TUNE_TABLE.json (the CI tune-smoke gate)")
+    ap.add_argument("--sweep", action="store_true",
+                    help="measure the candidate grids on the live backend")
+    ap.add_argument("--kernel", default=None,
+                    help="comma-separated kernel names (default: all)")
+    ap.add_argument("--write", action="store_true",
+                    help="persist sweep winners to TUNE_TABLE.json under "
+                         "this backend's key")
+    args = ap.parse_args(argv)
+    if args.check:
+        return check_table()
+    if args.sweep:
+        names = args.kernel.split(",") if args.kernel else None
+        unknown = sorted(set(names or ()) - set(KERNELS))
+        if unknown:
+            print(f"autotune: unknown kernels {unknown} "
+                  f"(have: {sorted(KERNELS)})", file=sys.stderr)
+            return 2
+        sweep(names, write=args.write)
+        return 0
+    ap.print_help()
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

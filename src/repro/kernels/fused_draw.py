@@ -45,7 +45,8 @@ from jax.experimental import pallas as pl
 from . import threefry
 from .tree_probe import tree_walk
 
-__all__ = ["PARAM_ORDER", "draw_core", "fused_draw", "fused_draw_ref"]
+__all__ = ["PARAM_ORDER", "draw_core", "fused_draw", "fused_draw_ref",
+           "fused_sample"]
 
 I32 = jnp.int32
 F32 = jnp.float32
@@ -243,6 +244,54 @@ def fused_draw(arena, key_data, params, *, layout, method: str, cap: int,
         interpret=interpret,
     )(*operands)
     return rows, pos, cnt[0], ovf[0].astype(jnp.bool_)
+
+
+def _sample_kernel(key_ref, *rest, method, cap, acap, n):
+    param_refs, (pos_ref, cnt_ref, ovf_ref) = rest[:-3], rest[-3:]
+    params = {name: ref[...] for name, ref in zip(PARAM_ORDER, param_refs)}
+    positions, count, overflow = draw_core(
+        key_ref[...], params, method=method, cap=cap, acap=acap, n=n)
+    pos_ref[...] = positions
+    cnt_ref[0] = count
+    ovf_ref[0] = overflow.astype(I32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("method", "cap", "acap", "n", "interpret"))
+def fused_sample(key_data, params, *, method: str, cap: int, acap: int = 0,
+                 n: int = 0, interpret: bool = True):
+    """The sampling HALF of the fused draw as its own one-launch kernel:
+    ``draw_core`` without the tree walk — key -> ``(positions (cap,) i32,
+    count () i32, overflow () bool)``, PositionSample conventions.
+
+    This is the paged draw route's front end (DESIGN.md §15): when the
+    index arena exceeds the VMEM budget the walk must stream pages
+    (``tree_probe_paged``) and cannot share the sampler's launch, but the
+    sampler itself only touches the root-level parameter vectors — which
+    fit VMEM whenever the root page does. Same operands, same Threefry
+    streams, so positions are bit-identical to ``fused_draw`` /
+    ``fused_draw_ref`` under the same key."""
+    operands = [key_data] + [params[k] for k in PARAM_ORDER]
+    spec1 = [pl.BlockSpec(x.shape, lambda i, nd=x.ndim: (0,) * nd)
+             for x in operands]
+    pos, cnt, ovf = pl.pallas_call(
+        functools.partial(_sample_kernel, method=method, cap=cap,
+                          acap=acap, n=n),
+        grid=(1,),
+        in_specs=spec1,
+        out_specs=[
+            pl.BlockSpec((cap,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((cap,), I32),
+            jax.ShapeDtypeStruct((1,), I32),
+            jax.ShapeDtypeStruct((1,), I32),
+        ],
+        interpret=interpret,
+    )(*operands)
+    return pos, cnt[0], ovf[0].astype(jnp.bool_)
 
 
 @functools.partial(

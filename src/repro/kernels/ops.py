@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from repro import config
 
 from . import ref as _ref
+from .autotune import tile_for
 from .bsearch_probe import bsearch_probe as _bsearch_tiles
 from .geo_gaps import geo_gaps_tiles as _geo_tiles
 from .prefix_sum import prefix_sum_tiles as _prefix_tiles
@@ -102,7 +103,9 @@ def searchsorted_prefix(pref: jnp.ndarray, q: jnp.ndarray,
             or pref.shape[0] > pol.vmem_limit or not pallas_enabled(pol)):
         return jnp.maximum(jnp.searchsorted(pref, q, side="right") - 1, 0)
     tiles = to_tiles(q)
-    out = _bsearch_tiles(pref, tiles, interpret=_interpret(interpret, pol))
+    out = _bsearch_tiles(pref, tiles,
+                         block_rows=tile_for("bsearch_probe", n, pol),
+                         interpret=_interpret(interpret, pol))
     return out.reshape(-1)[:n]
 
 
@@ -136,15 +139,20 @@ def geo_positions_fused(u: jnp.ndarray, p,
                       interpret=_interpret(interpret, pol)).reshape(-1)[:n]
 
 
-def decode_attention(q, k, v, bias=None, *, block_s: int = 512,
+def decode_attention(q, k, v, bias=None, *, block_s: Optional[int] = None,
                      interpret: Optional[bool] = None) -> jnp.ndarray:
-    """Online-softmax decode attention; pads S up to a block multiple."""
+    """Online-softmax decode attention; pads S up to a block multiple.
+    ``block_s=None`` resolves the KV tile through the tuning table
+    (``autotune.tile_for``, keyed by sequence length); an explicit value
+    pins it."""
     B, H, D = q.shape
     _, KV_H, S, _ = k.shape
     if bias is None:
         bias = jnp.zeros((B, S), jnp.float32)
     if not pallas_enabled():
         return _ref.flash_decode_ref(q, k, v, bias)
+    if block_s is None:
+        block_s = tile_for("flash_decode", S)
     pad = (-S) % block_s
     if pad:
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
@@ -155,13 +163,19 @@ def decode_attention(q, k, v, bias=None, *, block_s: int = 512,
 
 
 def prefill_attention(q, k, v, *, causal: bool = True,
-                      block_q: int = 256, block_k: int = 512,
+                      block_q: Optional[int] = None,
+                      block_k: Optional[int] = None,
                       interpret: Optional[bool] = None) -> jnp.ndarray:
     """Causal flash attention over full sequences (train/prefill); pads S up
-    to the block lcm."""
+    to the block lcm. ``block_q``/``block_k`` default to the tuning-table
+    pair (``autotune.tile_for('flash_prefill', S)``); explicit values pin
+    either axis independently."""
     B, H, S, D = q.shape
     if not pallas_enabled():
         return _ref.flash_prefill_ref(q, k, v, causal=causal)
+    tq, tk = tile_for("flash_prefill", S)
+    block_q = tq if block_q is None else block_q
+    block_k = tk if block_k is None else block_k
     step = math.lcm(block_q, block_k)
     pad = (-S) % step
     if pad:

@@ -1,0 +1,147 @@
+"""Kernel tile autotuner (DESIGN.md §15): resolution ladder, sweep winner
+selection (deterministic injected timer — no wall clocks in the unit leg),
+table write/round-trip, and the ``--check`` schema gate CI runs as the
+tune-smoke step."""
+import json
+
+import pytest
+
+from repro import config
+from repro.kernels import autotune
+from repro.kernels.autotune import (
+    KERNELS, TABLE_VERSION, bucket_of, check_table, default_entry,
+    load_table, sweep, tile_for,
+)
+
+
+def test_bucket_of_power_of_two_edges():
+    assert bucket_of(0) == "p0"
+    assert bucket_of(1) == "p0"
+    assert bucket_of(2) == "p1"
+    assert bucket_of(512) == "p9"
+    assert bucket_of(513) == "p10"
+    assert bucket_of(1 << 14) == "p14"
+
+
+def test_sweep_picks_fastest_candidate():
+    """A 2-candidate sweep with an injected deterministic timer: the sweep
+    must pick the candidate the timer reports fastest, never measure more
+    thunks than candidates, and bucket the winner by problem size."""
+    times = iter([250.0, 100.0])  # second candidate wins
+    calls = []
+
+    def timer(fn):
+        calls.append(fn)
+        return next(times)
+
+    winners = sweep(["bsearch_probe"], timer=timer,
+                    candidates={"bsearch_probe": (4, 8)},
+                    sizes={"bsearch_probe": (128,)},
+                    out=lambda s: None)
+    assert winners == {"bsearch_probe": {"p7": 8}}
+    assert len(calls) == 2
+
+
+def test_sweep_write_roundtrip_and_check(tmp_path):
+    path = tmp_path / "TUNE_TABLE.json"
+    seq = iter([50.0, 75.0])
+    sweep(["bsearch_probe"], timer=lambda fn: next(seq),
+          candidates={"bsearch_probe": (4, 8)},
+          sizes={"bsearch_probe": (128,)},
+          entry_key="faux/devkind", write=True, path=path,
+          out=lambda s: None)
+    table = load_table(path)
+    assert table["version"] == TABLE_VERSION
+    assert table["entries"]["faux/devkind"]["bsearch_probe"] == {"p7": 4}
+    # The mandatory default entry rides along on first write and covers
+    # every registered kernel, so the schema gate passes.
+    assert set(table["entries"]["default"]) == set(KERNELS)
+    assert check_table(path, out=lambda s: None) == 0
+
+
+class TestTileForLadder:
+    @pytest.fixture()
+    def table(self, tmp_path, monkeypatch):
+        path = tmp_path / "TUNE_TABLE.json"
+        path.write_text(json.dumps({
+            "version": TABLE_VERSION,
+            "entries": {
+                "default": default_entry(),
+                config.backend_key(): {
+                    "tree_probe": {"p7": 32},
+                    "flash_prefill": {"*": [128, 256]},
+                },
+            },
+        }))
+        monkeypatch.setattr(autotune, "TABLE_PATH", path)
+        return path
+
+    def test_backend_bucket_row_wins(self, table):
+        assert tile_for("tree_probe", 100) == 32  # p7 row
+
+    def test_falls_to_default_entry_outside_bucket(self, table):
+        # No p20 row and no '*' under the backend entry: the default
+        # entry's any-size row (the builtin constant) resolves.
+        assert tile_for("tree_probe", 1 << 20) == KERNELS["tree_probe"].default
+
+    def test_tuple_values_fold_back_from_json(self, table):
+        assert tile_for("flash_prefill", 1024) == (128, 256)
+
+    def test_policy_override_wins(self, table):
+        pol = config.KernelPolicy(tile_overrides=(("tree_probe", 4),))
+        assert tile_for("tree_probe", 100, pol) == 4
+
+    def test_tuned_false_skips_table(self, table):
+        pol = config.KernelPolicy(tuned=False)
+        assert tile_for("tree_probe", 100, pol) == KERNELS["tree_probe"].default
+
+    def test_missing_table_resolves_builtin(self, tmp_path, monkeypatch):
+        monkeypatch.setattr(autotune, "TABLE_PATH", tmp_path / "absent.json")
+        for name, spec in KERNELS.items():
+            assert tile_for(name, 1000) == spec.default
+
+
+class TestCheckTable:
+    def _write(self, tmp_path, obj):
+        path = tmp_path / "TUNE_TABLE.json"
+        path.write_text(json.dumps(obj) if not isinstance(obj, str) else obj)
+        return path
+
+    def _ok_table(self):
+        return {"version": TABLE_VERSION, "entries": {"default": default_entry()}}
+
+    def test_committed_table_passes(self):
+        # The real checked-in table is what CI gates (tune-smoke step).
+        assert check_table(out=lambda s: None) == 0
+
+    def test_missing_file_fails(self, tmp_path):
+        assert check_table(tmp_path / "absent.json", out=lambda s: None) == 1
+
+    def test_invalid_json_fails(self, tmp_path):
+        assert check_table(self._write(tmp_path, "{nope"),
+                           out=lambda s: None) == 1
+
+    def test_version_drift_fails(self, tmp_path):
+        t = self._ok_table()
+        t["version"] = TABLE_VERSION + 1
+        assert check_table(self._write(tmp_path, t), out=lambda s: None) == 1
+
+    def test_stale_kernel_name_fails(self, tmp_path):
+        t = self._ok_table()
+        t["entries"]["cpu/cpu"] = {"renamed_kernel": {"*": 8}}
+        assert check_table(self._write(tmp_path, t), out=lambda s: None) == 1
+
+    def test_missing_default_row_fails(self, tmp_path):
+        t = self._ok_table()
+        del t["entries"]["default"]["tree_probe"]
+        assert check_table(self._write(tmp_path, t), out=lambda s: None) == 1
+
+    def test_bad_bucket_fails(self, tmp_path):
+        t = self._ok_table()
+        t["entries"]["cpu/cpu"] = {"tree_probe": {"page7": 8}}
+        assert check_table(self._write(tmp_path, t), out=lambda s: None) == 1
+
+    def test_unparseable_value_fails(self, tmp_path):
+        t = self._ok_table()
+        t["entries"]["cpu/cpu"] = {"flash_prefill": {"*": "wide"}}
+        assert check_table(self._write(tmp_path, t), out=lambda s: None) == 1

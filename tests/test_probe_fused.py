@@ -19,7 +19,8 @@ from _optional import HealthCheck, given, settings, st  # hypothesis or shims
 
 from repro.core import (
     Atom, Database, DeltaBatch, JoinQuery, build_shred, get, pack_arena,
-    reshred_incremental, usr_get_rows, usr_get_rows_fused,
+    pack_index, reshred_incremental, usr_get_rows, usr_get_rows_fused,
+    usr_get_rows_paged,
 )
 from repro import config
 from repro.core import probe
@@ -29,9 +30,18 @@ SET = dict(deadline=None, max_examples=20,
            suppress_health_check=[HealthCheck.too_slow])
 
 
+def _shrunken(shred):
+    """A policy whose VMEM budget is one word short of the shred's arena —
+    the smallest budget that forces the paged rung (DESIGN.md §15)."""
+    return dataclasses.replace(config.current_policy(),
+                               vmem_limit=shred.packed.layout.size - 1)
+
+
 def assert_fused_matches(shred, extra_random: int = 64):
     """Fused GET == per-node USR GET, bit for bit, on every position (and a
-    few out-of-order random probes)."""
+    few out-of-order random probes). When the arena can page (more than one
+    page fits a one-word-short VMEM budget), the paged rung must be
+    bit-identical too — same walk, streamed page by page."""
     n = int(shred.join_size)
     if n == 0 or shred.packed is None:
         return
@@ -46,6 +56,15 @@ def assert_fused_matches(shred, extra_random: int = 64):
             assert got[name].dtype == want[name].dtype, name
             np.testing.assert_array_equal(
                 np.asarray(want[name]), np.asarray(got[name]), err_msg=name)
+        with config.override(_shrunken(shred)):
+            if not probe.paged_available(shred):
+                continue  # one-page arena: no budget pages it
+            paged = usr_get_rows_paged(shred, p)
+        assert set(want) == set(paged)
+        for name in want:
+            np.testing.assert_array_equal(
+                np.asarray(want[name]), np.asarray(paged[name]),
+                err_msg=f"paged:{name}")
 
 
 small_col = st.lists(st.integers(0, 4), min_size=0, max_size=8)
@@ -311,6 +330,141 @@ def test_deep_multi_child_tree():
                    Atom.of("C", "c", "e"), Atom.of("D", "d", "f"),
                    Atom.of("E", "f", "g")))
     assert_fused_matches(build_shred(db, q, rep="both"))
+
+
+class TestPagedRung:
+    """The paged rung of the kernel ladder (DESIGN.md §15): selection across
+    the VMEM-budget boundaries, build-time mutual exclusivity, and the
+    paged draw's bit-identity to the reference pipeline."""
+
+    def _db_q(self):
+        rng = np.random.default_rng(0)
+        m = 120
+        db = Database.from_columns({
+            "R": {"x": rng.integers(0, 20, m), "y": rng.integers(0, 20, m),
+                  "p": rng.uniform(0.05, 0.3, m)},
+            "S": {"y": rng.integers(0, 20, m), "z": rng.integers(0, 20, m)},
+            "T": {"z": rng.integers(0, 20, m), "u": rng.integers(0, 20, m)},
+        })
+        q = JoinQuery((Atom.of("R", "x", "y", "p"), Atom.of("S", "y", "z"),
+                       Atom.of("T", "z", "u")), prob_var="p")
+        return db, q
+
+    def _dparams(self, shred):
+        from repro.core import sampling
+        return sampling.fused_draw_params(
+            shred.root.weight, shred.root.data.column("p"), shred.root_prefE)
+
+    def test_rung_selection_across_vmem_boundaries(self):
+        db, q = self._db_q()
+        shred = build_shred(db, q, rep="usr")
+        size = shred.packed.layout.size
+        max_page = shred.packed.layout.max_page
+        assert max_page < size  # multi-page arena: all three rungs reachable
+        dp = self._dparams(shred)
+        base = dataclasses.replace(config.current_policy(), prefer=True)
+        ladder = []
+        for limit in (size, size - 1, max_page, max_page - 1):
+            pol = dataclasses.replace(base, vmem_limit=limit)
+            with config.override(pol):
+                sh = build_shred(db, q, rep="usr")
+                rep, narrow = probe.select_rep(sh, "usr")
+                route = probe.select_draw(sh, self._dparams(sh),
+                                          method="exprace")
+            ladder.append((limit, rep, narrow, route))
+        assert ladder == [
+            (size, "usr_fused", True, "fused"),
+            (size - 1, "usr_paged", True, "paged"),
+            (max_page, "usr_paged", True, "paged"),
+            (max_page - 1, "usr", False, "pernode"),
+        ]
+        # Call-time shrink (no rebuild): an already-packed index pages too.
+        with config.override(dataclasses.replace(base, vmem_limit=size - 1)):
+            assert probe.select_rep(shred, "usr")[0] == "usr_paged"
+            assert probe.select_draw(shred, dp, method="exprace") == "paged"
+
+    def test_pack_index_mutual_exclusivity(self):
+        db, q = self._db_q()
+        shred = build_shred(db, q, rep="usr")
+        assert shred.packed is not None and shred.paged is None
+        with config.override(_shrunken(shred)):
+            sh = build_shred(db, q, rep="usr")
+        assert sh.packed is None and sh.paged is not None
+        # Pages concatenate back to exactly the monolithic arena.
+        np.testing.assert_array_equal(
+            np.asarray(jnp.concatenate(sh.paged.pages)),
+            np.asarray(shred.packed.arena))
+        assert sh.paged.layout == shred.packed.layout
+
+    def test_explicit_paged_request_raises_out_of_regime(self):
+        db, q = self._db_q()
+        shred = build_shred(db, q, rep="usr")
+        dp = self._dparams(shred)
+        with pytest.raises(ValueError, match="paged"):
+            probe.select_draw(shred, dp, method="exprace", kernels="paged")
+
+    def test_paged_draw_matches_reference_and_fused(self):
+        db, q = self._db_q()
+        key = jax.random.key(11)
+        eng = QueryEngine(db)
+        s_fused = eng.poisson_sample(q, key, kernels="fused")
+        shred = build_shred(db, q, rep="usr")
+        with config.override(_shrunken(shred)):
+            eng2 = QueryEngine(db)
+            s_paged = eng2.poisson_sample(q, key, kernels="paged")
+            s_ref = eng2.poisson_sample(q, key, kernels="reference")
+        for other in (s_ref, s_fused):
+            np.testing.assert_array_equal(np.asarray(s_paged.positions),
+                                          np.asarray(other.positions))
+            assert int(s_paged.count) == int(other.count)
+            for v in s_paged.columns:
+                np.testing.assert_array_equal(
+                    np.asarray(s_paged.columns[v]),
+                    np.asarray(other.columns[v]), err_msg=v)
+
+    def test_post_delta_paged_coherence(self):
+        """pack_index stays coherent through reshred_incremental in the
+        paged regime: incremental == from-scratch, pages included."""
+        db, q = self._db_q()
+        shred = build_shred(db, q, rep="usr")
+        with config.override(_shrunken(shred)):
+            base = build_shred(db, q, rep="usr")
+            assert base.paged is not None
+            delta = DeltaBatch.of(S={"insert": {"y": [1, 2], "z": [3, 0]}})
+            new = reshred_incremental(base, db, q, delta)
+            scratch = build_shred(db.apply(delta), q, rep="usr")
+            assert (new.paged is None) == (scratch.paged is None)
+            if new.paged is not None:
+                assert new.paged.layout == scratch.paged.layout
+                for a, b in zip(new.paged.pages, scratch.paged.pages):
+                    np.testing.assert_array_equal(np.asarray(a),
+                                                  np.asarray(b))
+            assert_fused_matches(new)
+
+    def test_stacked_paged_coherence(self):
+        """Shard stacking carries the paged form like the packed one, and
+        the reuse path restores dropped pages (mirrors the packed test)."""
+        from repro.core.distributed import build_stacked, reshard_incremental
+
+        db, q = self._db_q()
+        shred = build_shred(db, q, rep="usr")
+        with config.override(_shrunken(shred)):
+            stacked, dbase = build_stacked(db, q, 2)
+            # Per-shard arenas are smaller than the global one, so shards
+            # may legitimately pack monoliths; either way the two forms
+            # stay mutually exclusive and stack-coherent.
+            assert (stacked.shred.packed is None) or (
+                stacked.shred.paged is None)
+            stripped = dataclasses.replace(
+                stacked, shred=dataclasses.replace(
+                    stacked.shred, packed=None, paged=None))
+            restacked, _, reused, rebuilt = reshard_incremental(
+                stripped, dbase, db, q, 2)
+            assert (reused, rebuilt) == (2, 0)
+            assert (restacked.shred.packed is None) == (
+                stacked.shred.packed is None)
+            assert (restacked.shred.paged is None) == (
+                stacked.shred.paged is None)
 
 
 def test_get_rows_rep_dispatch():
